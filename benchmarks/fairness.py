@@ -1,0 +1,43 @@
+"""Paper Figure 2 (bottom row): fairness — the distribution of final
+per-client accuracies across test clients, FedAvg vs FedMeta."""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from benchmarks.common import run_fedavg, run_fedmeta
+from benchmarks.table2_leaf import SETUPS
+
+
+def _dist_stats(accs):
+    a = np.asarray(accs)
+    return {"mean": float(a.mean()), "std": float(a.std()),
+            "p10": float(np.percentile(a, 10)),
+            "p90": float(np.percentile(a, 90)),
+            "frac_below_50": float((a < 0.5).mean())}
+
+
+def run(dataset: str = "femnist", rounds: int = 150, seed: int = 0,
+        json_out: str | None = None):
+    su = SETUPS[dataset]
+    ds = su["data"]()
+    splits = ds.split_clients(seed=seed)
+    model = su["model"]()
+    kw = dict(rounds=rounds, clients_per_round=su["clients_per_round"],
+              support_frac=0.2, support_size=su["support_size"],
+              query_size=su["query_size"], seed=seed)
+    rows = {}
+    r = run_fedavg(model, splits, local_lr=su["local_lr"], **kw)
+    rows["fedavg"] = _dist_stats(r["per_client"])
+    for method in ("maml", "meta-sgd"):
+        r = run_fedmeta(method, model, splits, inner_lr=su["inner_lr"],
+                        outer_lr=su["outer_lr"], **kw)
+        rows[method] = _dist_stats(r["per_client"])
+    for m, s in rows.items():
+        print(f"fairness,{dataset},{m},mean={s['mean']:.4f},"
+              f"std={s['std']:.4f},p10={s['p10']:.4f}", flush=True)
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows

@@ -1,0 +1,66 @@
+"""Paper Figure 3: system overhead (communication bytes + client FLOPs)
+to reach a target validation accuracy, per method. Validates the paper's
+headline claim: FedMeta needs 2.82x-4.33x less communication than FedAvg.
+"""
+from __future__ import annotations
+
+import json
+
+from benchmarks.common import run_fedavg, run_fedmeta
+from benchmarks.table2_leaf import SETUPS
+
+
+def run(dataset: str = "sent140", target_acc: float = 0.70,
+        max_rounds: int = 300, seed: int = 0, json_out: str | None = None,
+        eval_every: int = 10):
+    su = SETUPS[dataset]
+    ds = su["data"]()
+    splits = ds.split_clients(seed=seed)
+    model = su["model"]()
+    kw = dict(rounds=max_rounds, clients_per_round=su["clients_per_round"],
+              support_frac=0.2, support_size=su["support_size"],
+              query_size=su["query_size"], seed=seed, eval_every=eval_every,
+              target_acc=target_acc)
+    rows = []
+    runs = [
+        ("fedavg", lambda: run_fedavg(model, splits, local_lr=su["local_lr"],
+                                      **kw)),
+        ("fedavg(meta)", lambda: run_fedavg(model, splits,
+                                            local_lr=su["local_lr"],
+                                            meta_eval=True, **kw)),
+        ("maml", lambda: run_fedmeta("maml", model, splits,
+                                     inner_lr=su["inner_lr"],
+                                     outer_lr=su["outer_lr"], **kw)),
+        ("fomaml", lambda: run_fedmeta("fomaml", model, splits,
+                                       inner_lr=su["inner_lr"],
+                                       outer_lr=su["outer_lr"], **kw)),
+        ("meta-sgd", lambda: run_fedmeta("meta-sgd", model, splits,
+                                         inner_lr=su["inner_lr"],
+                                         outer_lr=su["outer_lr"], **kw)),
+    ]
+    for name, fn in runs:
+        r = fn()
+        rt = r["rounds_to_target"]
+        # comm bytes to target = rounds * clients * 2 * phi_bytes
+        per_round = r["comm"]["comm_MB"] / r["comm"]["rounds"]
+        flops_per_round = (r["comm"]["client_GFLOPs"] / r["comm"]["rounds"]
+                           if r["comm"]["rounds"] else 0.0)
+        row = {"dataset": dataset, "method": r["method"],
+               "target_acc": target_acc, "rounds_to_target": rt,
+               "comm_MB_to_target": round(per_round * rt, 2) if rt else None,
+               "client_GFLOPs_to_target":
+                   round(flops_per_round * rt, 2) if rt else None,
+               "final_acc": round(r["test_acc"], 4)}
+        rows.append(row)
+        print(f"fig3,{dataset},{r['method']},target={target_acc},"
+              f"rounds={rt},comm_MB={row['comm_MB_to_target']},"
+              f"GFLOPs={row['client_GFLOPs_to_target']}", flush=True)
+    base = next((x for x in rows if x["method"] == "fedavg"), None)
+    for row in rows:
+        if base and row["comm_MB_to_target"] and base["comm_MB_to_target"]:
+            row["comm_reduction_vs_fedavg"] = round(
+                base["comm_MB_to_target"] / row["comm_MB_to_target"], 2)
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows

@@ -1,0 +1,86 @@
+"""Assemble EXPERIMENTS.md tables from results/ artifacts.
+
+  PYTHONPATH=src python -m benchmarks.report [--dryrun] [--roofline]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_bytes(n):
+    if n is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB", "PB"):
+        if abs(n) < 1024:
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}EB"
+
+
+def dryrun_table(d="results/dryrun"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        r = json.load(open(f))
+        mesh = "2x16x16" if "pod2" in f else "16x16"
+        if r["status"] != "ok":
+            rows.append((r["arch"], r["shape"], mesh, r["status"], "-", "-",
+                         "-", "-"))
+            continue
+        mem = r.get("memory", {})
+        coll = r.get("collectives", {})
+        rows.append((
+            r["arch"], r["shape"], mesh, "ok",
+            fmt_bytes(mem.get("argument_bytes")),
+            fmt_bytes(mem.get("temp_bytes")),
+            fmt_bytes(coll.get("total_bytes")),
+            f"{r.get('compile_s', 0):.0f}s",
+        ))
+    hdr = ("| arch | shape | mesh | status | args/dev | temp | "
+           "collective bytes (per-iter HLO) | compile |")
+    sep = "|" + "---|" * 8
+    lines = [hdr, sep]
+    for row in rows:
+        lines.append("| " + " | ".join(str(x) for x in row) + " |")
+    return "\n".join(lines)
+
+
+def roofline_table(d="results/roofline"):
+    lines = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) | "
+        "dominant | MODEL_FLOPs | useful ratio |",
+        "|" + "---|" * 8,
+    ]
+    recs = []
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        r = json.load(open(f))
+        if r.get("status") == "error":
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR "
+                         f"{r['error'][:60]} | | | | | |")
+            continue
+        recs.append(r)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['dominant']} | {r['model_flops']:.2e} | "
+            f"{(r['useful_flops_ratio'] or 0):.3f} |")
+    return "\n".join(lines), recs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", action="store_true")
+    ap.add_argument("--roofline", action="store_true")
+    args = ap.parse_args()
+    if args.dryrun or not args.roofline:
+        print(dryrun_table())
+    if args.roofline or not args.dryrun:
+        t, _ = roofline_table()
+        print()
+        print(t)
+
+
+if __name__ == "__main__":
+    main()

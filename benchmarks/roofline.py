@@ -1,0 +1,333 @@
+"""Roofline analysis (EXPERIMENTS.md §Roofline).
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI per chip.
+
+Three terms per (arch x shape), single-pod 256-chip mesh:
+  compute    = HLO_FLOPs      / (chips * 197e12)
+  memory     = HLO_bytes      / (chips * 819e9)
+  collective = collective_bytes / (chips * 50e9)
+
+Methodology — why probes: XLA's cost_analysis counts a while/scan body
+ONCE, not x trip-count, so the full dry-run artifact (layer scan + client
+scan) under-reports FLOPs/bytes. We therefore lower *scan-free* probe
+programs (layers unrolled, clients unrolled) at full tensor dimensions
+but reduced (client, layer-rep) counts, and linearly extrapolate:
+
+  train:  cost(C, R) = a + C*(h + R*l)    probes (1,1), (2,1), (1,2)
+  serve:  cost(R)    = a + R*l            probes R=1, R=2
+
+Collective bytes come from the probes' post-SPMD HLO (scan-free => every
+collective visible with its true multiplicity). A calibration matmul
+determines whether cost_analysis reports per-partition or global numbers
+on this backend (flops_scale).
+"""
+# Must precede any jax import (same contract as dryrun.py).
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import math          # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp                      # noqa: E402
+import numpy as np   # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import INPUT_SHAPES, InputShape, get_config, list_archs  # noqa: E402
+from repro.configs.base import ModelConfig   # noqa: E402
+from repro.launch.dryrun import parse_collectives  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import (input_specs, make_decode_step,  # noqa: E402
+                                make_prefill_step, make_train_step,
+                                resolve_serving_config)
+from repro.models import init_lm             # noqa: E402
+from repro.sharding.rules import param_pspecs, state_pspecs  # noqa: E402
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link / chip
+
+
+# ---------------------------------------------------------- param counts
+
+def param_counts(cfg: ModelConfig):
+    """(total_params, active_params) analytically from the config."""
+    from repro.models.lm import layer_groups
+    d, ff, V = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    H, Kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+
+    def attn_params():
+        if cfg.attention == "mla":
+            nope, rp, R = cfg.head_dim, cfg.rope_head_dim, cfg.kv_lora_rank
+            q = (d * cfg.q_lora_rank + cfg.q_lora_rank * H * (nope + rp)
+                 if cfg.q_lora_rank else d * H * (nope + rp))
+            return (q + d * R + d * rp + R * H * nope * 2 + H * nope * d)
+        return d * H * hd + 2 * d * Kv * hd + H * hd * d
+
+    def mlp_params(width=None):
+        w = width or ff
+        mult = 3 if cfg.mlp_act == "swiglu" else 2
+        return mult * d * w
+
+    def mamba_params():
+        d_in = cfg.ssm_expand * d
+        N = cfg.ssm_state
+        return d * (2 * d_in + 2 * N + cfg.ssm_heads) + d_in * d
+
+    total = V * d * (1 if cfg.tie_embeddings else 2)
+    active = total
+    for i in range(cfg.num_layers):
+        kind = cfg.layer_pattern[i % len(cfg.layer_pattern)]
+        mix = attn_params() if kind == "attn" else mamba_params()
+        total += mix
+        active += mix
+        if ff == 0:
+            continue
+        if cfg.num_experts > 0 and cfg.is_moe_layer(i):
+            total += cfg.num_experts * mlp_params() + d * cfg.num_experts
+            active += cfg.num_experts_per_tok * mlp_params()
+            if cfg.num_shared_experts:
+                shared = mlp_params(ff * cfg.num_shared_experts)
+                total += shared
+                active += shared
+        else:
+            total += mlp_params()
+            active += mlp_params()
+    if cfg.is_encoder_decoder:
+        enc = cfg.num_encoder_layers * (attn_params() + mlp_params())
+        dec_cross = cfg.num_layers * attn_params()
+        total += enc + dec_cross
+        active += enc + dec_cross
+    return total, active
+
+
+# ----------------------------------------------------------- calibration
+
+def calibrate_flops_scale(mesh) -> float:
+    """Compare cost_analysis flops of a sharded matmul vs analytic global
+    flops -> multiplier that converts reported flops to GLOBAL flops."""
+    n = 2048
+    a = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    sh = NamedSharding(mesh, P("data", "model"))
+    fn = jax.jit(lambda x, y: x @ y, in_shardings=(sh, sh))
+    compiled = fn.lower(a, a).compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    reported = float(ca.get("flops", 0.0))
+    analytic = 2.0 * n * n * n
+    return analytic / reported if reported else 1.0
+
+
+# ----------------------------------------------------------- probe infra
+
+def _measure(fn, args, mesh):
+    with mesh:
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    coll = parse_collectives(compiled.as_text())
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll": float(coll["total_bytes"]),
+            "coll_by_type": coll["bytes_by_type"]}
+
+
+def _probe_cfg(cfg: ModelConfig, reps: int) -> ModelConfig:
+    from repro.models.lm import layer_groups
+    lead, period, n_reps = layer_groups(cfg)
+    P_ = len(period)
+    return dataclasses.replace(
+        cfg, num_layers=cfg.first_k_dense + P_ * reps,
+        num_encoder_layers=min(cfg.num_encoder_layers, reps))
+
+
+def _adam_cost(cfg: ModelConfig, chips: int):
+    """Analytic per-device cost of the outer Adam step (the C-independent
+    intercept `a` of the train cost model): reads θ, g, m, v; writes θ,
+    m, v (f32 states, bf16 params); ~12 flops/param."""
+    n_total, _ = param_counts(cfg)
+    n_dev = n_total / chips
+    return {"flops": 12.0 * n_dev,
+            "bytes": (4 * 4 + 2 * 2) * n_dev + 4 * 4 * n_dev,
+            "coll": 0.0}
+
+
+def probe_train(cfg: ModelConfig, shape: InputShape, mesh, algo="fomaml"):
+    """Two probes (C=1, R in {1,2}), remat off (probes measure the
+    algorithmic cost; the dry-run proves remat'd memory separately):
+      cost(1, R) = a + h + R*l  ->  l, (a+h); a estimated analytically
+      total(C)   = a + C*(h + n_reps*l)
+    """
+    from repro.models.lm import layer_groups
+    _, period, n_reps = layer_groups(cfg)
+    S = shape.seqs_per_client
+    chips = int(np.prod(mesh.devices.shape))
+    out = {}
+    for R in (1, 2):
+        pcfg = _probe_cfg(cfg, R)
+        pshape = dataclasses.replace(shape, global_batch=S,
+                                     clients_per_round=1)
+        step, init_state, _, _ = make_train_step(
+            pcfg, algo_name=algo, scan_clients=False, unroll_layers=True,
+            remat=False)
+        state_sds = jax.eval_shape(lambda i=init_state: i(jax.random.PRNGKey(0)))
+        pspec = param_pspecs(state_sds["phi"]["theta"], mesh)
+        sspec = state_pspecs(state_sds, pspec, mesh)
+        spec = input_specs(pcfg, pshape, mesh)
+        fn = jax.jit(step, in_shardings=(
+            jax.tree.map(lambda s: NamedSharding(mesh, s), sspec,
+                         is_leaf=lambda x: isinstance(x, P)),
+            jax.tree.map(lambda s: NamedSharding(mesh, s), spec["pspec"],
+                         is_leaf=lambda x: isinstance(x, P))))
+        out[R] = _measure(fn, (state_sds, spec["batch"]), mesh)
+
+    total = {}
+    C_full = shape.global_batch // S   # single-pod: G=1
+    a = _adam_cost(cfg, chips)
+    for key in ("flops", "bytes", "coll"):
+        l = out[2][key] - out[1][key]
+        a_plus_h = out[1][key] - l
+        h = max(0.0, a_plus_h - a[key])
+        total[key] = max(0.0, a[key] + C_full * (h + n_reps * l))
+    total["probes"] = {str(k): v for k, v in out.items()}
+    return total
+
+
+def probe_serve(cfg: ModelConfig, shape: InputShape, mesh,
+                param_mode: str = "train", cache_seq_shard: bool = False):
+    from repro.models.lm import layer_groups
+    _, period, n_reps = layer_groups(cfg)
+    out = {}
+    for R in (1, 2):
+        pcfg = resolve_serving_config(_probe_cfg(cfg, R), shape)
+        spec = input_specs(pcfg, shape, mesh,
+                           cache_seq_shard=cache_seq_shard)
+        if shape.kind == "prefill":
+            step = make_prefill_step(pcfg, unroll_layers=True)
+            params_sds = jax.eval_shape(
+                lambda c=pcfg: init_lm(jax.random.PRNGKey(0), c))
+            pspec = param_pspecs(params_sds, mesh, mode=param_mode)
+            fn = jax.jit(step, in_shardings=(
+                jax.tree.map(lambda s: NamedSharding(mesh, s), pspec,
+                             is_leaf=lambda x: isinstance(x, P)),
+                jax.tree.map(lambda s: NamedSharding(mesh, s), spec["pspec"],
+                             is_leaf=lambda x: isinstance(x, P))))
+            args = (params_sds, spec["batch"])
+        else:
+            scfg = spec["serving_cfg"]
+            step = make_decode_step(scfg, unroll_layers=True)
+            params_sds = jax.eval_shape(
+                lambda c=scfg: init_lm(jax.random.PRNGKey(0), c))
+            pspec = param_pspecs(params_sds, mesh, mode=param_mode)
+            nm = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                        is_leaf=lambda x: isinstance(x, P))
+            fn = jax.jit(step, in_shardings=(nm(pspec),
+                                             nm(spec["pspec"]["cache"]),
+                                             nm(spec["pspec"]["tokens"])))
+            args = (params_sds, spec["batch"]["cache"],
+                    spec["batch"]["tokens"])
+        out[R] = _measure(fn, args, mesh)
+
+    total = {}
+    for key in ("flops", "bytes", "coll"):
+        l = out[2][key] - out[1][key]
+        a = out[1][key] - l
+        total[key] = max(0.0, a + n_reps * l)
+    total["probes"] = {str(k): v for k, v in out.items()}
+    return total
+
+
+# -------------------------------------------------------------- analysis
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """Analytic useful FLOPs: 6*N_active*D train (FOMAML: support pass +
+    query pass), 2*N_active*D prefill/decode."""
+    _, active = param_counts(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens          # two grad passes over half
+                                              # the tokens each = 6*N*D
+    if shape.kind == "prefill":
+        return 2.0 * active * shape.global_batch * shape.seq_len
+    return 2.0 * active * shape.global_batch  # decode: 1 token/stream
+
+
+def analyze_pair(arch: str, shape_name: str, *, flops_scale: float,
+                 mesh=None) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = mesh or make_production_mesh()
+    chips = int(np.prod(mesh.devices.shape))
+    if shape.kind == "train":
+        tot = probe_train(cfg, shape, mesh)
+    else:
+        tot = probe_serve(cfg, shape, mesh)
+    flops_g = tot["flops"] * flops_scale
+    bytes_g = tot["bytes"] * flops_scale       # same partition convention
+    coll_g = tot["coll"] * chips               # HLO shapes are per-device
+    terms = {
+        "compute_s": flops_g / (chips * PEAK_FLOPS),
+        "memory_s": bytes_g / (chips * HBM_BW),
+        "collective_s": coll_g / (chips * ICI_BW),
+    }
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    return {"arch": arch, "shape": shape_name, "chips": chips,
+            "hlo_flops": flops_g, "hlo_bytes": bytes_g,
+            "collective_bytes": coll_g, **terms,
+            "dominant": dominant.replace("_s", ""),
+            "model_flops": mf,
+            "useful_flops_ratio": mf / flops_g if flops_g else None,
+            "probes": tot["probes"]}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--json", default="results/roofline")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh()
+    scale = calibrate_flops_scale(mesh)
+    print(f"# flops_scale (cost_analysis -> global) = {scale:.3f}",
+          flush=True)
+    pairs = ([(a, s) for a in list_archs() for s in INPUT_SHAPES]
+             if args.all else [(args.arch, args.shape)])
+    os.makedirs(args.json, exist_ok=True)
+    for arch, shape in pairs:
+        if arch == "seamless-m4t-medium" and shape == "long_500k":
+            print(f"roofline,{arch},{shape},SKIPPED", flush=True)
+            continue
+        try:
+            rec = analyze_pair(arch, shape, flops_scale=scale, mesh=mesh)
+            rec["flops_scale"] = scale
+            print(f"roofline,{arch},{shape},"
+                  f"compute={rec['compute_s']:.3e},"
+                  f"memory={rec['memory_s']:.3e},"
+                  f"collective={rec['collective_s']:.3e},"
+                  f"dominant={rec['dominant']},"
+                  f"useful={rec['useful_flops_ratio']:.3f}" if
+                  rec["useful_flops_ratio"] else "n/a", flush=True)
+        except Exception as e:
+            import traceback
+            rec = {"arch": arch, "shape": shape, "status": "error",
+                   "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-1500:]}
+            print(f"roofline,{arch},{shape},ERROR,{rec['error'][:120]}",
+                  flush=True)
+        with open(os.path.join(args.json, f"{arch}__{shape}.json"),
+                  "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

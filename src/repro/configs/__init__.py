@@ -1,0 +1,2 @@
+from repro.configs.base import ModelConfig, reduced_config, ARCH_REGISTRY, get_config, list_archs
+from repro.configs.shapes import INPUT_SHAPES, InputShape

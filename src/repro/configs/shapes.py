@@ -1,0 +1,41 @@
+"""Assigned input shapes and their mapping to entry points.
+
+  train_4k     seq_len=4,096    global_batch=256   -> meta train_step
+  prefill_32k  seq_len=32,768   global_batch=32    -> prefill_step
+  decode_32k   seq_len=32,768   global_batch=128   -> decode_step (1 new
+                                                      token, KV cache 32k)
+  long_500k    seq_len=524,288  global_batch=1     -> decode_step, requires
+                                                      sub-quadratic attention
+
+For train_4k the global batch of 256 sequences is organized into the
+FedMeta task structure: `clients_per_round` clients scanned sequentially,
+each contributing `seqs_per_client` sequences (half support, half query),
+with clients_per_round * seqs_per_client == global_batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # "train" | "prefill" | "decode"
+    # FedMeta task structure (train shapes only)
+    clients_per_round: int = 0
+    seqs_per_client: int = 0     # support + query per client
+
+    def __post_init__(self):
+        if self.kind == "train":
+            assert self.clients_per_round * self.seqs_per_client == self.global_batch
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train",
+                           clients_per_round=8, seqs_per_client=32),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}

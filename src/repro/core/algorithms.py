@@ -1,0 +1,172 @@
+"""The paper's contribution: gradient-based meta-learning algorithms in
+the federated setting (Algorithm 1 of the paper).
+
+Every algorithm maintains server-side *algorithm parameters* φ and
+implements the client-side procedure ModelTraining(φ; D_S, D_Q) -> g_u:
+
+  MAML      φ = {theta};          inner: θ_u = θ − α∇L_S(θ);
+            g = ∇_θ L_Q(θ_u)      (second-order, differentiates through
+                                   the inner update)
+  FOMAML    same, but g = ∇_{θ_u} L_Q(θ_u)  (first-order approximation)
+  Meta-SGD  φ = {theta, alpha};   inner: θ_u = θ − α ∘ ∇L_S(θ) with
+            per-coordinate learnable α; g = ∇_{(θ,α)} L_Q(θ_u)
+  Reptile   φ = {theta};          client runs k SGD steps on local data;
+            g = θ − θ_k           (beyond-paper extra; Nichol et al. '18)
+
+`adapt` is the deployment path (paper §3.2 last ¶): update θ on a new
+client's support set and predict with θ_u.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.meta_update import ops as mu_ops
+from repro.models.layers import Rng
+
+
+def _inner_adapt(loss_fn, theta, alpha, support, steps: int,
+                 second_order: bool):
+    """k gradient steps on the support set (unrolled so reverse-mode
+    differentiation through the update is possible for MAML/Meta-SGD)."""
+    for _ in range(steps):
+        g = jax.grad(loss_fn)(theta, support)
+        if not second_order:
+            g = jax.lax.stop_gradient(g)
+        theta = mu_ops.meta_update(theta, alpha, g)
+    return theta
+
+
+@dataclasses.dataclass
+class MetaAlgorithm:
+    """Common interface; see factory classes below."""
+    name: str
+    loss_fn: Callable                     # (params, batch) -> scalar
+    eval_fn: Callable                     # (params, batch) -> (loss, metrics)
+    inner_lr: float
+    inner_steps: int = 1
+
+    # ---- subclass hooks -------------------------------------------------
+    def init_state(self, key, model_init: Callable):
+        raise NotImplementedError
+
+    def client_grad(self, phi, support, query):
+        """ModelTraining on one client: returns (g_u matching φ, metrics)."""
+        raise NotImplementedError
+
+    def adapt(self, phi, support, steps: int | None = None):
+        """Deployment: adapt θ to a new client's support set."""
+        alpha = phi.get("alpha", self.inner_lr)
+        return _inner_adapt(self.loss_fn, phi["theta"], alpha, support,
+                            steps or self.inner_steps, second_order=False)
+
+    def query_metrics(self, phi, support, query):
+        theta_u = self.adapt(phi, support)
+        loss, m = self.eval_fn(theta_u, query)
+        return {"query_loss": loss, **m}
+
+
+class MAML(MetaAlgorithm):
+    def __init__(self, loss_fn, eval_fn, inner_lr, inner_steps=1, order=2,
+                 name=None):
+        super().__init__(name or ("maml" if order == 2 else "fomaml"),
+                         loss_fn, eval_fn, inner_lr, inner_steps)
+        assert order in (1, 2)
+        self.order = order
+
+    def init_state(self, key, model_init):
+        return {"theta": model_init(key)}
+
+    def client_grad(self, phi, support, query):
+        def meta_loss(theta):
+            theta_u = _inner_adapt(self.loss_fn, theta, self.inner_lr,
+                                   support, self.inner_steps,
+                                   second_order=(self.order == 2))
+            return self.eval_fn(theta_u, query)
+
+        if self.order == 2:
+            (loss, metrics), g = jax.value_and_grad(meta_loss,
+                                                    has_aux=True)(phi["theta"])
+        else:
+            # FOMAML: gradient at the adapted parameters
+            theta_u = _inner_adapt(self.loss_fn, phi["theta"], self.inner_lr,
+                                   support, self.inner_steps,
+                                   second_order=False)
+            (loss, metrics), g = jax.value_and_grad(
+                self.eval_fn, has_aux=True)(theta_u, query)
+        return {"theta": g}, {"query_loss": loss, **metrics}
+
+
+def FOMAML(loss_fn, eval_fn, inner_lr, inner_steps=1):
+    return MAML(loss_fn, eval_fn, inner_lr, inner_steps, order=1)
+
+
+class MetaSGD(MetaAlgorithm):
+    def __init__(self, loss_fn, eval_fn, inner_lr, inner_steps=1, order=2):
+        super().__init__("meta-sgd" if order == 2 else "meta-sgd-fo",
+                         loss_fn, eval_fn, inner_lr, inner_steps)
+        self.order = order
+
+    def init_state(self, key, model_init):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(0) if isinstance(key, int)
+                                  else key)
+        theta = model_init(k1)
+        # α initialized around inner_lr with small random spread (paper [12])
+        rng = Rng(k2)
+        alpha = jax.tree.map(
+            lambda p: self.inner_lr * (0.5 + jax.random.uniform(
+                rng.next(), p.shape, jnp.float32)),
+            theta)
+        return {"theta": theta, "alpha": alpha}
+
+    def client_grad(self, phi, support, query):
+        def meta_loss(phi_):
+            theta_u = _inner_adapt(self.loss_fn, phi_["theta"], phi_["alpha"],
+                                   support, self.inner_steps,
+                                   second_order=(self.order == 2))
+            return self.eval_fn(theta_u, query)
+
+        (loss, metrics), g = jax.value_and_grad(meta_loss,
+                                                has_aux=True)(phi)
+        return g, {"query_loss": loss, **metrics}
+
+
+class Reptile(MetaAlgorithm):
+    """Beyond-paper extra: first-order, no support/query split needed."""
+
+    def __init__(self, loss_fn, eval_fn, inner_lr, inner_steps=3):
+        super().__init__("reptile", loss_fn, eval_fn, inner_lr, inner_steps)
+
+    def init_state(self, key, model_init):
+        return {"theta": model_init(key)}
+
+    def client_grad(self, phi, support, query):
+        theta_k = _inner_adapt(self.loss_fn, phi["theta"], self.inner_lr,
+                               support, self.inner_steps, second_order=False)
+        # one extra pass over the query set (uses all local data, like the
+        # original Reptile which has no support/query distinction)
+        theta_k = _inner_adapt(self.loss_fn, theta_k, self.inner_lr, query,
+                               1, second_order=False)
+        g = jax.tree.map(lambda a, b: (a - b).astype(jnp.float32),
+                         phi["theta"], theta_k)
+        loss, metrics = self.eval_fn(theta_k, query)
+        return {"theta": g}, {"query_loss": loss, **metrics}
+
+
+def make_algorithm(name: str, loss_fn, eval_fn, inner_lr: float,
+                   inner_steps: int = 1) -> MetaAlgorithm:
+    name = name.lower()
+    if name == "maml":
+        return MAML(loss_fn, eval_fn, inner_lr, inner_steps, order=2)
+    if name == "fomaml":
+        return MAML(loss_fn, eval_fn, inner_lr, inner_steps, order=1)
+    if name in ("meta-sgd", "metasgd"):
+        return MetaSGD(loss_fn, eval_fn, inner_lr, inner_steps, order=2)
+    if name in ("meta-sgd-fo", "metasgd-fo"):
+        return MetaSGD(loss_fn, eval_fn, inner_lr, inner_steps, order=1)
+    if name == "reptile":
+        return Reptile(loss_fn, eval_fn, inner_lr, inner_steps)
+    raise ValueError(f"unknown algorithm {name!r}")

@@ -1,0 +1,72 @@
+"""The FedMeta server round (paper Algorithm 1, AlgorithmUpdate).
+
+One meta-training round:
+  1. a batch of m sampled clients' (support, query) data arrives with a
+     leading client axis on every leaf,
+  2. every client computes g_u = ModelTraining(φ; D_S^u, D_Q^u),
+  3. the server updates φ with the (weighted) average of the g_u via the
+     outer optimizer (Adam here, per paper A.2).
+
+Two client execution strategies:
+  - "vmap": all clients in parallel (paper's `for u in parallel`; right
+    choice for small models / CPU simulation),
+  - "scan": clients sequential with a meta-gradient accumulator carry —
+    the TPU-native, memory-optimal mapping used for the large LM configs
+    (one adapted θ_u lives at a time; see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.pytree import tree_add, tree_scale, tree_zeros_like
+
+
+def federated_meta_step(algo, optimizer, phi, opt_state, support, query,
+                        weights=None, *, client_axis: str = "vmap"):
+    """support/query: pytrees with leading client axis m on each leaf.
+    weights: (m,) aggregation weights (paper A.2 weights by local data
+    count); None = uniform 1/m. Returns (phi, opt_state, metrics)."""
+    m = jax.tree.leaves(support)[0].shape[0]
+    if weights is None:
+        w = jnp.full((m,), 1.0 / m, jnp.float32)
+    else:
+        w = weights / jnp.sum(weights)
+
+    if client_axis == "vmap":
+        gs, metrics = jax.vmap(
+            lambda s, q: algo.client_grad(phi, s, q))(support, query)
+        meta_g = jax.tree.map(
+            lambda g: jnp.tensordot(w, g.astype(jnp.float32), axes=1), gs)
+        metrics = jax.tree.map(lambda x: jnp.sum(w * x), metrics)
+    elif client_axis == "scan":
+        def body(carry, inp):
+            acc, k = carry
+            s, q, wi = inp
+            g, met = algo.client_grad(phi, s, q)
+            acc = tree_add(acc, tree_scale(
+                jax.tree.map(lambda x: x.astype(jnp.float32), g), wi))
+            return (acc, k + 1), met
+
+        acc0 = tree_zeros_like(
+            jax.tree.map(lambda x: x.astype(jnp.float32), phi))
+        (meta_g, _), mets = jax.lax.scan(body, (acc0, 0), (support, query, w))
+        metrics = jax.tree.map(lambda x: jnp.mean(x), mets)
+    else:
+        raise ValueError(client_axis)
+
+    new_phi, new_opt = optimizer.update(phi, meta_g, opt_state)
+    return new_phi, new_opt, metrics
+
+
+def make_meta_train_step(algo, optimizer, *, client_axis: str = "vmap",
+                         jit: bool = True):
+    """-> step(state, support, query, weights) with state = {phi, opt}."""
+
+    def step(state, support, query, weights=None):
+        phi, opt_state, metrics = federated_meta_step(
+            algo, optimizer, state["phi"], state["opt"], support, query,
+            weights, client_axis=client_axis)
+        return {"phi": phi, "opt": opt_state}, metrics
+
+    return jax.jit(step) if jit else step

@@ -1,0 +1,67 @@
+"""Loss / metric functions shared by FedMeta and the baselines."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_xent(logits, labels):
+    """Mean cross entropy. logits: (..., C) f32; labels: (...) int."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+def topk_accuracy(logits, labels, k: int):
+    topk = jax.lax.top_k(logits, k)[1]                       # (..., k)
+    hit = jnp.any(topk == labels[..., None], axis=-1)
+    return jnp.mean(hit.astype(jnp.float32))
+
+
+def classification_loss(apply_fn):
+    """-> loss_fn(params, (x, y)) and eval_fn(params, (x, y))->(loss, metrics)."""
+
+    def loss_fn(params, batch):
+        x, y = batch
+        return softmax_xent(apply_fn(params, x), y)
+
+    def eval_fn(params, batch):
+        x, y = batch
+        logits = apply_fn(params, x)
+        return softmax_xent(logits, y), {"accuracy": accuracy(logits, y)}
+
+    return loss_fn, eval_fn
+
+
+def lm_loss(apply_fn):
+    """Next-token LM loss over token batches.
+
+    Batches are either a (B, L) token array or a dict with "tokens"
+    (+ "embeds" for modality archs — consumed by apply_fn).
+    apply_fn(params, batch) -> (logits (B, L', V), aux) — aux (e.g. MoE
+    load-balance loss) is added to the objective so the router trains in
+    both FedMeta loops. L' may include a modality prefix; loss aligns to
+    the last L text positions."""
+
+    def _tokens(batch):
+        return batch["tokens"] if isinstance(batch, dict) else batch
+
+    def loss_fn(params, batch):
+        tokens = _tokens(batch)
+        logits, aux = apply_fn(params, batch)
+        logits = logits[:, -tokens.shape[1]:]
+        return softmax_xent(logits[:, :-1], tokens[:, 1:]) + aux
+
+    def eval_fn(params, batch):
+        tokens = _tokens(batch)
+        logits, aux = apply_fn(params, batch)
+        logits = logits[:, -tokens.shape[1]:]
+        loss = softmax_xent(logits[:, :-1], tokens[:, 1:])
+        return loss + aux, {"accuracy": accuracy(logits[:, :-1], tokens[:, 1:]),
+                            "nll": loss}
+
+    return loss_fn, eval_fn

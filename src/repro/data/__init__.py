@@ -1,0 +1,5 @@
+from repro.data.federated import ClientData, FederatedDataset, TaskBatch, sample_task_batch
+from repro.data.synth_femnist import make_femnist
+from repro.data.synth_shakespeare import make_shakespeare
+from repro.data.synth_sent140 import make_sent140
+from repro.data.synth_recommend import make_recommend

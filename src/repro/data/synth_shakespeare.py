@@ -1,0 +1,63 @@
+"""Synthetic Shakespeare-like federated next-character prediction.
+
+LEAF Shakespeare: each speaking role is a client; next-char prediction over
+a ~70-symbol vocabulary with 80-char contexts (paper Table 1 / A.1:
+528 clients, ~1183 samples/client with huge σ, 2–70 classes/client).
+
+Generator: a global order-1 Markov chain over the vocabulary (shared
+"language"), with a per-client *role voice*: a client-specific sparse
+perturbation of the transition matrix plus a preferred-symbol subset.
+Local adaptation captures the voice; a global model captures only the
+average chain — giving FedMeta the same advantage the paper exploits.
+
+Each example is (context[seq_len] int32, next_char int32).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.federated import ClientData, FederatedDataset
+
+VOCAB = 70
+
+
+def _row_normalize(m):
+    return m / m.sum(axis=1, keepdims=True)
+
+
+def make_shakespeare(num_clients: int = 60, seq_len: int = 40,
+                     mean_samples: int = 300, vocab: int = VOCAB,
+                     seed: int = 0) -> FederatedDataset:
+    rng = np.random.RandomState(seed)
+    # global language: peaked Markov chain (natural text is highly
+    # predictable per-char; a flat chain caps top-1 accuracy ~14% which is
+    # unrepresentative). Each char has 2-4 likely successors with ~85% of
+    # the mass -> order-1 Bayes ceiling ~45%, comparable to real
+    # Shakespeare next-char accuracy.
+    base = rng.gamma(0.05, 1.0, size=(vocab, vocab)) + 1e-4
+    for r in range(vocab):
+        k = rng.randint(2, 5)
+        peaks = rng.choice(vocab, size=k, replace=False)
+        base[r, peaks] += rng.dirichlet(np.ones(k)) * 6.0
+    base = _row_normalize(base)
+    clients = []
+    for _ in range(num_clients):
+        # role voice: boost a random subset of transitions
+        voice = base.copy()
+        k = rng.randint(5, 20)
+        rows = rng.randint(0, vocab, size=k)
+        cols = rng.randint(0, vocab, size=k)
+        voice[rows, cols] += rng.uniform(2.0, 6.0, size=k)
+        voice = _row_normalize(voice)
+        n = int(np.clip(rng.lognormal(np.log(mean_samples), 0.8), 20, 8 * mean_samples))
+        # sample one long stream then slice contexts
+        stream = np.zeros(n + seq_len + 1, np.int32)
+        stream[0] = rng.randint(vocab)
+        cdf = np.cumsum(voice, axis=1)
+        u = rng.random_sample(n + seq_len)
+        for t in range(1, n + seq_len + 1):
+            stream[t] = np.searchsorted(cdf[stream[t - 1]], u[t - 1])
+        xs = np.stack([stream[i:i + seq_len] for i in range(n)])
+        ys = stream[seq_len:seq_len + n]
+        clients.append(ClientData(xs.astype(np.int32), ys.astype(np.int32)))
+    return FederatedDataset(clients, vocab, name="synth-shakespeare")

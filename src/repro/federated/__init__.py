@@ -1,0 +1,3 @@
+from repro.federated.comm import CommTracker
+from repro.federated.fedavg import FedAvgTrainer
+from repro.federated.server import FederatedTrainer, evaluate_meta, evaluate_global

@@ -1,0 +1,68 @@
+"""Byte- and FLOP-accounting for the federated protocol.
+
+The paper's Figure 3 measures, per method, the total bytes transferred
+between server and clients and total client FLOPs needed to hit a target
+accuracy. This tracker reproduces that accounting exactly:
+
+  per round: download = m * bytes(φ), upload = m * bytes(g_u)
+  (g_u matches φ structurally for every algorithm in Alg. 1)
+  client compute = m * flops_per_client (measured once from the compiled
+  client function via XLA cost analysis).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.utils.pytree import tree_bytes
+
+
+@dataclasses.dataclass
+class CommTracker:
+    phi_bytes: int
+    clients_per_round: int
+    flops_per_client: float = 0.0
+    rounds: int = 0
+
+    @classmethod
+    def for_state(cls, phi, clients_per_round: int,
+                  flops_per_client: float = 0.0):
+        return cls(tree_bytes(phi), clients_per_round, flops_per_client)
+
+    def tick(self, rounds: int = 1):
+        self.rounds += rounds
+
+    @property
+    def download_bytes(self) -> int:
+        return self.rounds * self.clients_per_round * self.phi_bytes
+
+    @property
+    def upload_bytes(self) -> int:
+        return self.rounds * self.clients_per_round * self.phi_bytes
+
+    @property
+    def total_bytes(self) -> int:
+        return self.download_bytes + self.upload_bytes
+
+    @property
+    def total_flops(self) -> float:
+        return self.rounds * self.clients_per_round * self.flops_per_client
+
+    def summary(self) -> dict:
+        return {
+            "rounds": self.rounds,
+            "comm_MB": self.total_bytes / 1e6,
+            "client_GFLOPs": self.total_flops / 1e9,
+        }
+
+
+def measure_client_flops(fn, *args) -> float:
+    """FLOPs of one client call via XLA cost analysis (CPU backend)."""
+    import jax
+    try:
+        compiled = jax.jit(fn).lower(*args).compile()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        return float(cost.get("flops", 0.0))
+    except Exception:
+        return 0.0

@@ -1,0 +1,69 @@
+"""Federated Averaging baseline (McMahan et al. 2017) + FedAvg(Meta).
+
+FedAvg: each sampled client runs local optimization (Adam, per paper A.2)
+for `local_steps` minibatch steps starting from the global model; the
+server replaces the global model with the example-count-weighted average
+of the returned client models.
+
+FedAvg(Meta) is an *evaluation-time* variant (paper §4.1): the same
+trained global model is fine-tuned on a test client's support set before
+testing on its query set — handled in server.evaluate_global.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adam, sgd
+
+
+@dataclasses.dataclass
+class FedAvgTrainer:
+    loss_fn: Callable
+    eval_fn: Callable
+    local_lr: float
+    local_steps: int = 5
+    local_optimizer: str = "adam"          # paper A.2 uses Adam locally
+    name: str = "fedavg"
+
+    def _opt(self):
+        return (adam(self.local_lr) if self.local_optimizer == "adam"
+                else sgd(self.local_lr))
+
+    def init_state(self, key, model_init):
+        return {"theta": model_init(key)}
+
+    def local_train(self, theta, batches):
+        """batches: pytree with leading (steps,) axis of minibatches."""
+        opt = self._opt()
+
+        def body(carry, batch):
+            p, st = carry
+            g = jax.grad(self.loss_fn)(p, batch)
+            p, st = opt.update(p, g, st)
+            return (p, st), None
+
+        (theta, _), _ = jax.lax.scan(body, (theta, opt.init(theta)), batches)
+        return theta
+
+    def round_step(self, state, client_batches, weights=None):
+        """client_batches: leading axes (m, steps, ...) on every leaf."""
+        m = jax.tree.leaves(client_batches)[0].shape[0]
+        w = (jnp.full((m,), 1.0 / m, jnp.float32) if weights is None
+             else weights / jnp.sum(weights))
+        thetas = jax.vmap(lambda b: self.local_train(state["theta"], b))(
+            client_batches)
+        theta = jax.tree.map(
+            lambda t: jnp.tensordot(w, t.astype(jnp.float32),
+                                    axes=1).astype(t.dtype), thetas)
+        return {"theta": theta}
+
+    def finetune(self, theta, support, steps: int | None = None):
+        """FedAvg(Meta): fine-tune on a test client's support set."""
+        reps = steps or self.local_steps
+        batches = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (reps,) + x.shape), support)
+        return self.local_train(theta, batches)

@@ -1,0 +1,152 @@
+"""Federated training drivers: server round loop, client sampling,
+communication accounting, and the paper's evaluation schemes.
+
+Evaluation (paper §4.1 + A.2): accuracy w.r.t. all data points on held-out
+*test clients*; each test client adapts on its support set (FedMeta /
+FedAvg(Meta)) or not (FedAvg) and is scored on its query set.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fedmeta import make_meta_train_step
+from repro.data.federated import sample_task_batch
+from repro.federated.comm import CommTracker, measure_client_flops
+from repro.optim import Optimizer
+
+
+def _batch_eval(eval_one, clients, m, support_frac, support_size, query_size,
+                rng):
+    tb = sample_task_batch(clients, m, support_frac, support_size, query_size,
+                           rng)
+    accs, losses = eval_one((tb.support_x, tb.support_y),
+                            (tb.query_x, tb.query_y))
+    return np.asarray(accs), np.asarray(losses)
+
+
+def make_meta_evaluator(algo, adapt_steps=None):
+    """Jitted once; φ passed as an argument (avoids per-eval recompiles)."""
+
+    @jax.jit
+    def eval_batch(phi, support, query):
+        def one(s, q):
+            theta_u = algo.adapt(phi, s, steps=adapt_steps)
+            loss, met = algo.eval_fn(theta_u, q)
+            return met["accuracy"], loss
+        return jax.vmap(one)(support, query)
+
+    return eval_batch
+
+
+def make_global_evaluator(eval_fn, finetune: Optional[Callable] = None):
+    @jax.jit
+    def eval_batch(theta, support, query):
+        def one(s, q):
+            th = theta if finetune is None else finetune(theta, s)
+            loss, met = eval_fn(th, q)
+            return met["accuracy"], loss
+        return jax.vmap(one)(support, query)
+
+    return eval_batch
+
+
+def evaluate_meta(algo, phi, clients, *, support_frac, support_size,
+                  query_size, seed=0, adapt_steps=None, evaluator=None):
+    """Per-client adapted accuracy over all test clients; returns
+    (mean_acc, per_client_accs). Pass a `make_meta_evaluator` result to
+    amortize compilation across calls."""
+    rng = np.random.RandomState(seed)
+    ev = evaluator or make_meta_evaluator(algo, adapt_steps)
+    accs, losses = _batch_eval(
+        lambda s, q: ev(phi, s, q), clients, len(clients), support_frac,
+        support_size, query_size, rng)
+    return float(accs.mean()), accs
+
+
+def evaluate_global(eval_fn, theta, clients, *, support_frac, support_size,
+                    query_size, seed=0, finetune: Optional[Callable] = None,
+                    evaluator=None):
+    """FedAvg (finetune=None) / FedAvg(Meta) (finetune=trainer.finetune)."""
+    rng = np.random.RandomState(seed)
+    ev = evaluator or make_global_evaluator(eval_fn, finetune)
+    accs, losses = _batch_eval(
+        lambda s, q: ev(theta, s, q), clients, len(clients), support_frac,
+        support_size, query_size, rng)
+    return float(accs.mean()), accs
+
+
+@dataclasses.dataclass
+class FederatedTrainer:
+    """FedMeta meta-training loop (Algorithm 1 AlgorithmUpdate)."""
+    algo: object
+    optimizer: Optimizer
+    train_clients: list
+    clients_per_round: int
+    support_frac: float
+    support_size: int
+    query_size: int
+    weighted: bool = True          # paper A.2: weight by local data count
+    client_axis: str = "vmap"
+    seed: int = 0
+
+    def __post_init__(self):
+        self._step = make_meta_train_step(self.algo, self.optimizer,
+                                          client_axis=self.client_axis)
+        self._rng = np.random.RandomState(self.seed)
+        self._evaluator = make_meta_evaluator(self.algo)
+        self.comm: Optional[CommTracker] = None
+        self.history: list = []
+
+    def init(self, key, model_init):
+        phi = self.algo.init_state(key, model_init)
+        state = {"phi": phi, "opt": self.optimizer.init(phi)}
+        self.comm = CommTracker.for_state(phi, self.clients_per_round)
+        return state
+
+    def measure_flops(self, state):
+        """One-off XLA cost analysis of the client procedure."""
+        tb = sample_task_batch(self.train_clients, 1, self.support_frac,
+                               self.support_size, self.query_size, self._rng)
+        sup = jax.tree.map(lambda x: jnp.asarray(x[0]),
+                           (tb.support_x, tb.support_y))
+        qry = jax.tree.map(lambda x: jnp.asarray(x[0]),
+                           (tb.query_x, tb.query_y))
+        fl = measure_client_flops(
+            lambda s, q: self.algo.client_grad(state["phi"], s, q)[0],
+            sup, qry)
+        if self.comm:
+            self.comm.flops_per_client = fl
+        return fl
+
+    def run(self, state, rounds: int, eval_every: int = 0,
+            eval_clients=None, log: Callable = None):
+        for r in range(rounds):
+            tb = sample_task_batch(self.train_clients, self.clients_per_round,
+                                   self.support_frac, self.support_size,
+                                   self.query_size, self._rng)
+            weights = jnp.asarray(tb.weight) if self.weighted else None
+            state, metrics = self._step(
+                state, (jnp.asarray(tb.support_x), jnp.asarray(tb.support_y)),
+                (jnp.asarray(tb.query_x), jnp.asarray(tb.query_y)), weights)
+            self.comm.tick()
+            if eval_every and eval_clients is not None and \
+                    ((r + 1) % eval_every == 0 or r == rounds - 1):
+                acc, _ = evaluate_meta(
+                    self.algo, state["phi"], eval_clients,
+                    support_frac=self.support_frac,
+                    support_size=self.support_size,
+                    query_size=self.query_size, seed=self.seed,
+                    evaluator=self._evaluator)
+                rec = {"round": r + 1, "eval_acc": acc,
+                       **{k: float(v) for k, v in metrics.items()},
+                       **self.comm.summary()}
+                self.history.append(rec)
+                if log:
+                    log(rec)
+        return state

@@ -1,0 +1,1 @@
+from repro.kernels.attention.ops import flash_attention, set_default_impl

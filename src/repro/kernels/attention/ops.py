@@ -1,0 +1,46 @@
+"""Jitted wrapper / dispatcher for attention.
+
+Layout contract with the models: (B, L, H, hd) activations. The Pallas
+kernel wants (B, H, L, hd); this wrapper transposes around the call.
+
+impl:
+  "xla"              — pure-jnp reference (CPU tests, dry-run lowering)
+  "pallas_interpret" — Pallas kernel, interpret mode (CPU correctness)
+  "pallas"           — Pallas kernel compiled for TPU (production)
+Default comes from REPRO_ATTN_IMPL env var, else "xla".
+"""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from repro.kernels.attention import ref
+from repro.kernels.attention.flash_attention import flash_attention_bhld
+
+_DEFAULT_IMPL = os.environ.get("REPRO_ATTN_IMPL", "xla")
+
+
+def set_default_impl(impl: str) -> None:
+    global _DEFAULT_IMPL
+    assert impl in ("xla", "pallas", "pallas_interpret")
+    _DEFAULT_IMPL = impl
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    q_offset: int = 0, kv_length=None, impl: str | None = None,
+                    block_q: int = 128, block_k: int = 128):
+    """q: (B, Lq, H, hd); k, v: (B, Lk, Kv, hd) -> (B, Lq, H, hd)."""
+    impl = impl or _DEFAULT_IMPL
+    if impl == "xla" or kv_length is not None:
+        # variable kv_length (ragged decode) stays on the XLA path
+        return ref.mha_reference(q, k, v, causal=causal, window=window,
+                                 q_offset=q_offset, kv_length=kv_length)
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_attention_bhld(
+        qt, kt, vt, causal=causal, window=window, q_offset=q_offset,
+        block_q=block_q, block_k=block_k,
+        interpret=(impl == "pallas_interpret"))
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,60 @@
+"""Pure-jnp oracle for multi-head attention (GQA, causal, sliding window).
+
+This is the reference implementation the Pallas kernel is validated
+against, and also the XLA fallback used on CPU and inside the dry-run.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def mha_reference(q, k, v, *, causal: bool = True, window: int | None = None,
+                  q_offset: int = 0, kv_length=None, scale: float | None = None):
+    """Multi-head attention with GQA, causal and sliding-window masking.
+
+    q: (B, Lq, H, hd); k, v: (B, Lk, Kv, hd) with H % Kv == 0.
+    q_offset: absolute position of q[0] relative to k[0] (decode: Lk-1).
+    kv_length: optional (B,) or scalar count of valid kv slots (from 0).
+    window: sliding window size; query i attends keys j with
+            i - window < j <= i (standard SWA convention).
+    Returns (B, Lq, H, hd) in q.dtype; softmax in float32.
+    """
+    B, Lq, H, hd = q.shape
+    _, Lk, Kv, _ = k.shape
+    hd_v = v.shape[-1]          # value dim may differ from qk dim (MLA)
+    assert H % Kv == 0
+    G = H // Kv
+    if scale is None:
+        scale = 1.0 / np.sqrt(hd)
+
+    qf = q.astype(jnp.float32).reshape(B, Lq, Kv, G, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # scores: (B, Kv, G, Lq, Lk)
+    s = jnp.einsum("bqkgd,bjkd->bkgqj", qf, kf) * scale
+
+    qpos = jnp.arange(Lq) + q_offset            # absolute query positions
+    jpos = jnp.arange(Lk)
+    mask = jnp.ones((Lq, Lk), bool)
+    if causal:
+        mask &= jpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= jpos[None, :] > qpos[:, None] - window
+    if kv_length is not None:
+        kvl = jnp.asarray(kv_length)
+        if kvl.ndim == 0:
+            mask &= (jpos < kvl)[None, :]
+        else:
+            mask = mask[None] & (jpos[None, None, :] < kvl[:, None, None])
+    if mask.ndim == 2:
+        mask = mask[None]
+    s = jnp.where(mask[:, None, None], s, -jnp.inf)
+    # guard fully-masked rows (can happen with kv_length=0)
+    smax = jnp.max(s, axis=-1, keepdims=True)
+    smax = jnp.where(jnp.isfinite(smax), smax, 0.0)
+    p = jnp.exp(s - smax)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.maximum(denom, 1e-30)
+    o = jnp.einsum("bkgqj,bjkd->bqkgd", p, vf)
+    return o.reshape(B, Lq, H, hd_v).astype(q.dtype)

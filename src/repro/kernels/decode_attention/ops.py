@@ -1,0 +1,31 @@
+"""Dispatcher for one-token decode attention.
+
+impl: "xla" (oracle; default), "pallas", "pallas_interpret".
+"""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import ref
+from repro.kernels.decode_attention.flash_decode import flash_decode
+
+_DEFAULT_IMPL = os.environ.get("REPRO_DECODE_ATTN_IMPL", "xla")
+
+
+def set_default_impl(impl: str) -> None:
+    global _DEFAULT_IMPL
+    assert impl in ("xla", "pallas", "pallas_interpret")
+    _DEFAULT_IMPL = impl
+
+
+def decode_attention(q, k_cache, v_cache, kv_length, *, impl=None,
+                     block_k: int = 512):
+    """q: (B, H, hd); caches: (B, C, Kv, hd); kv_length: () or (B,)."""
+    impl = impl or _DEFAULT_IMPL
+    kvl = jnp.broadcast_to(jnp.asarray(kv_length), (q.shape[0],))
+    if impl == "xla":
+        return ref.decode_attention_ref(q, k_cache, v_cache, kvl)
+    return flash_decode(q, k_cache, v_cache, kvl, block_k=block_k,
+                        interpret=(impl == "pallas_interpret"))

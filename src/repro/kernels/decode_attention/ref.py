@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for one-token decode attention over a KV cache."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def decode_attention_ref(q, k_cache, v_cache, kv_length):
+    """q: (B, H, hd); k_cache/v_cache: (B, C, Kv, hd); kv_length: () or
+    (B,) valid cache slots. Returns (B, H, hd); softmax in f32."""
+    B, H, hd = q.shape
+    _, C, Kv, _ = k_cache.shape
+    G = H // Kv
+    qf = q.astype(jnp.float32).reshape(B, Kv, G, hd)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    s = jnp.einsum("bkgd,bjkd->bkgj", qf, kf) / np.sqrt(hd)
+    kvl = jnp.asarray(kv_length)
+    mask = jnp.arange(C)[None, :] < (kvl[:, None] if kvl.ndim else kvl)
+    if mask.ndim == 1:
+        mask = mask[None]
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgj,bjkd->bkgd", p, vf)
+    return o.reshape(B, H, hd).astype(q.dtype)

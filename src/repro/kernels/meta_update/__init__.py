@@ -1,0 +1,1 @@
+from repro.kernels.meta_update.ops import meta_update

@@ -1,0 +1,50 @@
+"""Pallas TPU kernel for the fused Meta-SGD inner update.
+
+The inner update θ' = θ − α ∘ g is executed once per client per round
+over the full parameter vector — pure memory traffic (3 reads, 1 write,
+1 FMA per element). Unfused, XLA emits it per-leaf as mul+sub pairs; the
+kernel streams 128-lane-aligned tiles through VMEM in a single pass,
+which is the roofline-optimal schedule for this op on TPU.
+
+Layout: callers flatten the pytree into one padded (n_tiles * TILE,)
+vector (see ops.py); the kernel is a 1-D grid over (TILE,) blocks
+reshaped to (TILE // 128, 128) for (sublane, lane) alignment.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 8 * 128 * 64          # 64k elements per grid step (~256 KiB f32)
+
+
+def _meta_update_kernel(theta_ref, alpha_ref, g_ref, out_ref):
+    out_ref[...] = (theta_ref[...].astype(jnp.float32)
+                    - alpha_ref[...].astype(jnp.float32)
+                    * g_ref[...].astype(jnp.float32)).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def meta_update_flat(theta, alpha, g, *, interpret: bool = False):
+    """theta, alpha, g: flat (N,) with N % TILE == 0. Returns θ − α∘g."""
+    (N,) = theta.shape
+    assert N % TILE == 0, N
+    rows = TILE // 128
+    n_tiles = N // TILE
+
+    def reshape(x):
+        return x.reshape(n_tiles * rows, 128)
+
+    spec = pl.BlockSpec((rows, 128), lambda i: (i, 0))
+    out = pl.pallas_call(
+        _meta_update_kernel,
+        grid=(n_tiles,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n_tiles * rows, 128), theta.dtype),
+        interpret=interpret,
+    )(reshape(theta), reshape(alpha), reshape(g))
+    return out.reshape(N)

@@ -1,0 +1,60 @@
+"""Dispatcher for the fused inner update.
+
+impl: "xla" (tree_map; default), "pallas", "pallas_interpret".
+The pallas path flattens the pytree into one padded vector, runs the
+single-pass kernel, and unflattens — one kernel launch for the whole
+parameter set instead of one op pair per leaf.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.meta_update import ref
+from repro.kernels.meta_update.fused import TILE, meta_update_flat
+
+_DEFAULT_IMPL = os.environ.get("REPRO_META_UPDATE_IMPL", "xla")
+
+
+def set_default_impl(impl: str) -> None:
+    global _DEFAULT_IMPL
+    assert impl in ("xla", "pallas", "pallas_interpret")
+    _DEFAULT_IMPL = impl
+
+
+def _flatten_pad(tree, dtype):
+    leaves = jax.tree.leaves(tree)
+    flat = jnp.concatenate([x.reshape(-1).astype(dtype) for x in leaves])
+    pad = (-flat.shape[0]) % TILE
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat
+
+
+def _unflatten(tree, flat):
+    leaves, treedef = jax.tree.flatten(tree)
+    out, off = [], 0
+    for x in leaves:
+        n = int(np.prod(x.shape))
+        out.append(flat[off:off + n].reshape(x.shape).astype(x.dtype))
+        off += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def meta_update(theta, alpha, grads, *, impl: str | None = None):
+    """θ' = θ − α ∘ g; α is a scalar or a pytree matching θ."""
+    impl = impl or _DEFAULT_IMPL
+    if impl == "xla":
+        return ref.meta_update_ref(theta, alpha, grads)
+    dtype = jnp.float32
+    t = _flatten_pad(theta, dtype)
+    if isinstance(alpha, (int, float)):
+        a = jnp.full_like(t, alpha)
+    else:
+        a = _flatten_pad(alpha, dtype)
+    g = _flatten_pad(grads, dtype)
+    out = meta_update_flat(t, a, g, interpret=(impl == "pallas_interpret"))
+    return _unflatten(theta, out)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the fused inner update θ' = θ − α ∘ g.
+
+α is a per-coordinate learning-rate pytree (Meta-SGD) or a python scalar
+(MAML). This is the paper's Algorithm 1 line "θ_u ← θ − α ∘ ∇L(θ)".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def meta_update_ref(theta, alpha, grads):
+    if isinstance(alpha, (int, float)):
+        return jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - alpha * g.astype(jnp.float32)).astype(p.dtype),
+            theta, grads)
+    return jax.tree.map(
+        lambda p, a, g: (p.astype(jnp.float32)
+                         - a.astype(jnp.float32) * g.astype(jnp.float32)
+                         ).astype(p.dtype),
+        theta, alpha, grads)

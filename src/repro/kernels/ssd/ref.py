@@ -1,0 +1,104 @@
+"""Pure-jnp oracles for the Mamba2 SSD (state-space duality) scan.
+
+Two references:
+  - `ssd_sequential`: the exact O(L) recurrence (ground truth),
+  - `ssd_chunked_ref`: the chunked SSD algorithm in plain jnp (the
+    algorithm the Pallas kernel implements; equal to sequential up to
+    float error).
+
+Shapes (ngroups = 1):
+  x:  (B, L, nh, hp)   per-head inputs
+  dt: (B, L, nh)       softplus-activated step sizes
+  A:  (nh,)            negative decay rates
+  Bm: (B, L, N)        input projection (shared across heads)
+  Cm: (B, L, N)        output projection
+Returns y: (B, L, nh, hp)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_sequential(x, dt, A, Bm, Cm):
+    B, L, nh, hp = x.shape
+    N = Bm.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                     # (B,nh,hp),(B,nh),(B,N),(B,N)
+        decay = jnp.exp(dtt * Af[None])           # (B, nh)
+        state = (state * decay[..., None, None]
+                 + jnp.einsum("bh,bn,bhp->bhpn", dtt, bt, xt))
+        y = jnp.einsum("bn,bhpn->bhp", ct, state)
+        return state, y
+
+    state0 = jnp.zeros((B, nh, hp, N), jnp.float32)
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    _, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+
+
+def ssd_chunked_ref(x, dt, A, Bm, Cm, chunk: int, return_final_state: bool = False):
+    B, L, nh, hp = x.shape
+    N = Bm.shape[-1]
+    assert L % chunk == 0, (L, chunk)
+    nc = L // chunk
+    xf = x.astype(jnp.float32).reshape(B, nc, chunk, nh, hp)
+    dtf = dt.astype(jnp.float32).reshape(B, nc, chunk, nh)
+    Bf = Bm.astype(jnp.float32).reshape(B, nc, chunk, N)
+    Cf = Cm.astype(jnp.float32).reshape(B, nc, chunk, N)
+    Af = A.astype(jnp.float32)
+
+    a = dtf * Af[None, None, None]                 # (B,nc,Q,nh) log-decay
+    cum = jnp.cumsum(a, axis=2)                    # inclusive cumsum
+    xdt = xf * dtf[..., None]
+
+    # ---- intra-chunk (quadratic within chunk)
+    # decay(i,j) = exp(cum_i - cum_j) for j <= i  (uses inclusive cumsums:
+    # product of decays in (j, i])
+    di = cum[:, :, :, None, :]                     # (B,nc,Q,1,nh)
+    dj = cum[:, :, None, :, :]                     # (B,nc,1,Q,nh)
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+    dmat = jnp.exp(di - dj) * tri[None, None, :, :, None]
+    cb = jnp.einsum("bcin,bcjn->bcij", Cf, Bf)     # (B,nc,Q,Q)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", cb, dmat, xdt)
+
+    # ---- chunk states: S_c = sum_j exp(cum_last - cum_j) B_j (x dt)_j
+    last = cum[:, :, -1:, :]                       # (B,nc,1,nh)
+    sdecay = jnp.exp(last - cum)                   # (B,nc,Q,nh)
+    S = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", Bf, sdecay, xdt)
+
+    # ---- inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(last[:, :, 0, :])        # (B,nc,nh)
+
+    def combine(prev, cur):
+        S_prev, _ = prev
+        S_c, dec = cur
+        return S_c + S_prev * dec[..., None, None], dec
+
+    def scan_step(S_prev, inp):
+        S_c, dec = inp
+        S_in = S_prev                              # state entering the chunk
+        S_out = S_c + S_prev * dec[..., None, None]
+        return S_out, S_in
+
+    S0 = jnp.zeros((B, nh, hp, N), jnp.float32)
+    (S_final, S_in) = jax.lax.scan(scan_step, S0,
+                                   (jnp.moveaxis(S, 1, 0),
+                                    jnp.moveaxis(chunk_decay, 1, 0)))
+    S_in = jnp.moveaxis(S_in, 0, 1)                # (B,nc,nh,hp,N)
+
+    # ---- inter-chunk output: y_inter[i] = exp(cum_i) C_i . S_in
+    y_inter = jnp.einsum("bcin,bcih,bchpn->bcihp",
+                         Cf, jnp.exp(cum), S_in)
+
+    y = (y_intra + y_inter).reshape(B, L, nh, hp).astype(x.dtype)
+    if return_final_state:
+        return y, S_final                          # (B, nh, hp, N)
+    return y

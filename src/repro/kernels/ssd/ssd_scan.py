@@ -1,0 +1,81 @@
+"""Pallas TPU kernel for the Mamba2 SSD intra-chunk compute.
+
+Per grid step (b, h, c) the kernel holds one (Q, hp) chunk of inputs and
+one (Q, N) chunk of B/C projections in VMEM and produces:
+  - y_intra: the within-chunk quadratic term ((C B^T) ⊙ decay) @ (x·dt),
+  - S_c:     the chunk's contribution to the running state (N, hp).
+Both are MXU matmuls of shape (Q,Q)x(Q,hp) and (N,Q)x(Q,hp); Q and N are
+chosen 128-aligned. The sequential inter-chunk recurrence (a tiny
+(nh,hp,N) state per step) stays in XLA — it is O(nc) with trivial FLOPs,
+while >99% of SSD FLOPs live in this kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(xdt_ref, a_ref, b_ref, c_ref, y_ref, s_ref, *, Q: int):
+    xdt = xdt_ref[0, 0].astype(jnp.float32)        # (Q, hp)
+    a = a_ref[0, 0].astype(jnp.float32)            # (Q, 1) log-decay steps
+    Bm = b_ref[0, 0].astype(jnp.float32)           # (Q, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)           # (Q, N)
+
+    cum = jnp.cumsum(a[:, 0])                      # inclusive (Q,)
+    # intra-chunk decay matrix exp(cum_i - cum_j), lower-triangular
+    diff = cum[:, None] - cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    dmat = jnp.where(jj <= ii, jnp.exp(diff), 0.0)
+
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    y = jax.lax.dot_general(cb * dmat, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (Q, hp)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    sdecay = jnp.exp(cum[-1] - cum)                # (Q,)
+    S = jax.lax.dot_general(Bm * sdecay[:, None], xdt,
+                            (((0,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (N, hp)
+    s_ref[0, 0, 0] = S.astype(s_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_intra_chunk_pallas(xdt, a, Bm, Cm, *, chunk: int,
+                           interpret: bool = False):
+    """xdt: (B, nh, L, hp); a: (B, nh, L, 1); Bm/Cm: (B, L, N).
+
+    Returns y_intra (B, nh, L, hp) float32 and S (B, nh, nc, N, hp) f32.
+    """
+    B, nh, L, hp = xdt.shape
+    N = Bm.shape[-1]
+    assert L % chunk == 0
+    nc = L // chunk
+    Bm_c = Bm.reshape(B, nc, chunk, N)
+    Cm_c = Cm.reshape(B, nc, chunk, N)
+
+    kernel = functools.partial(_ssd_chunk_kernel, Q=chunk)
+    y, S = pl.pallas_call(
+        kernel,
+        grid=(B, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, hp), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, 1), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, hp), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, 1, N, hp), lambda b, h, c: (b, h, c, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nh, L, hp), jnp.float32),
+            jax.ShapeDtypeStruct((B, nh, nc, N, hp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xdt, a, Bm_c, Cm_c)
+    return y, S

@@ -1,0 +1,239 @@
+"""Multi-pod dry-run: lower + compile every (arch x input shape) on the
+production mesh with 512 placeholder host devices; capture memory and
+cost analysis + the collective schedule for the roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m \
+      --shape train_4k [--multi-pod] [--algo fomaml] [--json out.json]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --json results/
+"""
+# The XLA device-count override MUST precede any other import (jax locks
+# the platform device count on first initialization).
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp                              # noqa: E402
+import numpy as np   # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P   # noqa: E402
+
+from repro.configs import INPUT_SHAPES, get_config, list_archs  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import (input_specs, make_decode_step,  # noqa: E402
+                                make_prefill_step, make_train_step,
+                                resolve_serving_config)
+from repro.sharding.rules import param_pspecs, state_pspecs  # noqa: E402
+
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:%\S+\s*=\s*)?"
+    r"((?:\(|)[a-z0-9_]+\[[^=]*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op, by type."""
+    totals: dict = {}
+    counts: dict = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        shapes_str, op = m.group(1), m.group(2)
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(shapes_str):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        key = op.replace("-start", "")
+        totals[key] = totals.get(key, 0) + nbytes
+        counts[key] = counts.get(key, 0) + 1
+    return {"bytes_by_type": totals, "counts": counts,
+            "total_bytes": sum(totals.values())}
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               algo: str = "fomaml", remat: bool = True,
+               donate: bool = True, extra_tag: str = "",
+               moe_impl: str = "tp", shard_seq: bool = False,
+               opt_state_dtype: str = "float32") -> dict:
+    import dataclasses
+    from repro.sharding.context import set_mesh
+    cfg = get_config(arch)
+    if moe_impl != "tp" or shard_seq:
+        cfg = dataclasses.replace(cfg, moe_impl=moe_impl,
+                                  shard_seq=shard_seq)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    set_mesh(mesh)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "x".join(map(str, mesh.devices.shape)), "algo": algo,
+           "tag": extra_tag, "moe_impl": moe_impl, "shard_seq": shard_seq,
+           "opt_state_dtype": opt_state_dtype}
+    t0 = time.time()
+
+    if shape.kind == "train":
+        train_step, init_state, _, _ = make_train_step(
+            cfg, algo_name=algo, remat=remat,
+            opt_state_dtype=opt_state_dtype)
+        state_sds = jax.eval_shape(lambda: init_state(jax.random.PRNGKey(0)))
+        pspec = param_pspecs(state_sds["phi"]["theta"], mesh)
+        state_spec = state_pspecs(state_sds, pspec, mesh)
+        spec = input_specs(cfg, shape, mesh)
+        fn = jax.jit(train_step,
+                     in_shardings=(_named(mesh, state_spec),
+                                   _named(mesh, spec["pspec"])),
+                     out_shardings=(_named(mesh, state_spec), None),
+                     donate_argnums=(0,) if donate else ())
+        args = (state_sds, spec["batch"])
+    elif shape.kind == "prefill":
+        scfg = resolve_serving_config(cfg, shape)
+        step = make_prefill_step(scfg)
+        params_sds = jax.eval_shape(
+            lambda: __import__("repro.models", fromlist=["init_lm"]).init_lm(
+                jax.random.PRNGKey(0), scfg))
+        pspec = param_pspecs(params_sds, mesh)
+        spec = input_specs(scfg, shape, mesh)
+        fn = jax.jit(step, in_shardings=(_named(mesh, pspec),
+                                         _named(mesh, spec["pspec"])))
+        args = (params_sds, spec["batch"])
+    else:  # decode
+        spec = input_specs(cfg, shape, mesh)
+        if spec is None:
+            rec["status"] = "skipped"
+            return rec
+        scfg = spec["serving_cfg"]
+        step = make_decode_step(scfg)
+        from repro.models import init_lm
+        params_sds = jax.eval_shape(lambda: init_lm(jax.random.PRNGKey(0),
+                                                    scfg))
+        pspec = param_pspecs(params_sds, mesh)
+        fn = jax.jit(step,
+                     in_shardings=(_named(mesh, pspec),
+                                   _named(mesh, spec["pspec"]["cache"]),
+                                   _named(mesh, spec["pspec"]["tokens"])),
+                     out_shardings=(None, _named(mesh, spec["pspec"]["cache"])),
+                     donate_argnums=(1,) if donate else ())
+        args = (params_sds, spec["batch"]["cache"], spec["batch"]["tokens"])
+
+    with mesh:
+        lowered = fn.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+    # ---- memory analysis (proves it fits)
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "generated_code_bytes": int(ma.generated_code_size_in_bytes),
+        }
+    except Exception as e:     # CPU backend may not expose it
+        rec["memory"] = {"error": str(e)}
+
+    # ---- cost analysis (FLOPs / bytes for the roofline)
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        rec["cost"] = {k: float(v) for k, v in ca.items()
+                       if k in ("flops", "bytes accessed", "transcendentals",
+                                "utilization operand 0", "optimal_seconds")
+                       or k.startswith("bytes accessed")}
+    except Exception as e:
+        rec["cost"] = {"error": str(e)}
+
+    # ---- collective schedule from the post-SPMD HLO
+    hlo = compiled.as_text()
+    rec["collectives"] = parse_collectives(hlo)
+    rec["hlo_bytes"] = len(hlo)
+    rec["status"] = "ok"
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--algo", default="fomaml")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--moe-impl", default="tp", choices=["tp", "ep"])
+    ap.add_argument("--shard-seq", action="store_true")
+    ap.add_argument("--opt-dtype", default="float32")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--json", default=None,
+                    help="output file (single) or directory (--all)")
+    args = ap.parse_args()
+
+    pairs = []
+    if args.all:
+        for arch in list_archs():
+            for shape in INPUT_SHAPES:
+                pairs.append((arch, shape))
+    else:
+        pairs.append((args.arch, args.shape))
+
+    results = []
+    for arch, shape in pairs:
+        # documented skip (DESIGN.md §6): enc-dec @ 512k decode
+        if arch == "seamless-m4t-medium" and shape == "long_500k":
+            rec = {"arch": arch, "shape": shape, "status": "skipped",
+                   "reason": "enc-dec decoder is full-attention; 512k "
+                             "decode outside operating regime (DESIGN.md)"}
+        else:
+            try:
+                rec = dryrun_one(arch, shape, multi_pod=args.multi_pod,
+                                 algo=args.algo, remat=not args.no_remat,
+                                 extra_tag=args.tag, moe_impl=args.moe_impl,
+                                 shard_seq=args.shard_seq,
+                                 opt_state_dtype=args.opt_dtype)
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape, "status": "error",
+                       "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-2000:]}
+        results.append(rec)
+        slim = {k: v for k, v in rec.items() if k not in ("trace",)}
+        print(json.dumps(slim), flush=True)
+        if args.json:
+            if args.all:
+                os.makedirs(args.json, exist_ok=True)
+                mesh_tag = "pod2" if args.multi_pod else "pod1"
+                path = os.path.join(
+                    args.json, f"{arch}__{shape}__{mesh_tag}"
+                               f"{('__' + args.tag) if args.tag else ''}.json")
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+            else:
+                with open(args.json, "w") as f:
+                    json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Production training launcher.
+
+On a real TPU slice this drives FedMeta meta-training for any assigned
+architecture at any train shape on the production mesh; on CPU use
+--reduced (reduced config + host mesh + small shape) to execute the same
+code path end-to-end.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+      --shape train_4k --algo fomaml --steps 20 --reduced
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import save_server_state
+from repro.configs import INPUT_SHAPES, get_config, list_archs, reduced_config
+from repro.data.lm_tasks import make_lm_task_batch
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.steps import input_specs, make_train_step, train_batch_layout
+from repro.sharding.rules import param_pspecs, state_pspecs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--algo", default="fomaml",
+                    choices=["maml", "fomaml", "meta-sgd", "meta-sgd-fo",
+                             "reptile"])
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--inner-lr", type=float, default=0.01)
+    ap.add_argument("--outer-lr", type=float, default=1e-4)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config + host mesh (CPU execution)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--log-every", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    shape = INPUT_SHAPES[args.shape]
+    assert shape.kind == "train", "use serve.py for inference shapes"
+
+    if args.reduced:
+        cfg = reduced_config(cfg)
+        shape = dataclasses.replace(shape, seq_len=64, global_batch=4,
+                                    clients_per_round=2, seqs_per_client=2)
+        mesh = make_host_mesh(1, 1)
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+
+    train_step, init_state, algo, _ = make_train_step(
+        cfg, algo_name=args.algo, inner_lr=args.inner_lr,
+        outer_lr=args.outer_lr)
+    spec = input_specs(cfg, shape, mesh)
+    state_sds = jax.eval_shape(lambda: init_state(jax.random.PRNGKey(0)))
+    pspec = param_pspecs(state_sds["phi"]["theta"], mesh)
+    sspec = state_pspecs(state_sds, pspec, mesh)
+    nm = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
+                                is_leaf=lambda x: isinstance(x, P))
+    step = jax.jit(train_step, in_shardings=(nm(sspec), nm(spec["pspec"])),
+                   out_shardings=(nm(sspec), None), donate_argnums=(0,))
+
+    with mesh:
+        state = jax.jit(init_state, out_shardings=nm(sspec))(
+            jax.random.PRNGKey(0))
+        G, C, S_sup, S_qry, L_text, n_mod = train_batch_layout(
+            cfg, shape, mesh.devices.shape[0]
+            if "pod" in mesh.axis_names else 1)
+        for it in range(args.steps):
+            tasks = make_lm_task_batch(G * C, S_sup, S_qry, L_text,
+                                       cfg.vocab_size, seed=it)
+            batch = {
+                "support": {"tokens": jnp.asarray(
+                    tasks.support_tokens.reshape(G, C, S_sup, L_text))},
+                "query": {"tokens": jnp.asarray(
+                    tasks.query_tokens.reshape(G, C, S_qry, L_text))},
+            }
+            if cfg.modality:
+                rngd = np.random.RandomState(it)
+                for part, S in (("support", S_sup), ("query", S_qry)):
+                    batch[part]["embeds"] = jnp.asarray(rngd.normal(
+                        0, 0.1, (G, C, S, n_mod, cfg.d_model)),
+                        jnp.dtype(cfg.dtype))
+            t0 = time.time()
+            state, metrics = step(state, batch)
+            jax.block_until_ready(metrics)
+            if (it + 1) % args.log_every == 0:
+                print(f"step {it+1:4d}  loss="
+                      f"{float(metrics['query_loss']):.4f}  acc="
+                      f"{float(metrics['accuracy']):.4f}  "
+                      f"({time.time()-t0:.2f}s)", flush=True)
+        if args.ckpt:
+            host_state = jax.device_get(state)
+            path = save_server_state(args.ckpt, args.steps, host_state)
+            print("checkpoint:", path)
+
+
+if __name__ == "__main__":
+    main()

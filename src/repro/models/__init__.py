@@ -1,0 +1,1 @@
+from repro.models.lm import init_lm, lm_apply, init_decode_cache, lm_decode_step

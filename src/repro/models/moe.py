@@ -1,0 +1,110 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-based dispatch.
+
+Baseline sharding story (tensor-parallel experts): stacked expert weights
+(E, d, d_ff) are sharded on d/d_ff over ("data","model"); dispatch keeps
+tokens shard-local. An expert-parallel all-to-all variant lives in
+`repro/sharding/ep_moe.py` as the §Perf optimization.
+
+Dispatch algorithm (jit-stable shapes, standard Switch-style capacity):
+  1. router logits -> top-k experts + renormalized gates (Mixtral style),
+  2. flatten (token, slot) pairs, stable-sort by expert id,
+  3. within-expert rank via cumsum; tokens with rank >= capacity drop,
+  4. gather tokens into (E, capacity, d), run all experts as one batched
+     einsum (MXU-friendly), scatter-add back weighted by gates.
+
+Also computes the Switch/ST-MoE load-balance auxiliary loss — kept inside
+both FedMeta loops so the router adapts per client.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import Rng, dense_init, mlp_apply, mlp_init
+
+
+def moe_init(rng: Rng, cfg, dtype):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    p = {"w_router": dense_init(rng, d, E, dtype)}
+    # stacked expert weights: (E, ...) so experts run as one batched matmul
+    def stack(maker):
+        return jnp.stack([maker() for _ in range(E)])
+    if cfg.mlp_act == "swiglu":
+        p["w_gate"] = stack(lambda: dense_init(rng, d, ff, dtype))
+    p["w_up"] = stack(lambda: dense_init(rng, d, ff, dtype))
+    p["w_down"] = stack(lambda: dense_init(rng, ff, d, dtype))
+    if cfg.num_shared_experts > 0:
+        p["shared"] = mlp_init(rng, d, ff * cfg.num_shared_experts,
+                               cfg.mlp_act, dtype)
+    return p
+
+
+def _expert_ffn(params, cfg, x_e):
+    """x_e: (E, C, d) -> (E, C, d): all experts as batched einsums."""
+    if cfg.mlp_act == "swiglu":
+        h = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", x_e, params["w_gate"]))
+             * jnp.einsum("ecd,edf->ecf", x_e, params["w_up"]))
+    elif cfg.mlp_act == "relu2":
+        h = jnp.square(jax.nn.relu(jnp.einsum("ecd,edf->ecf", x_e,
+                                              params["w_up"])))
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", x_e, params["w_up"]))
+    return jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+
+
+def moe_apply(params, cfg, x, *, capacity_factor: float | None = None):
+    """x: (B, L, d) -> (y, aux_loss)."""
+    B, L, d = x.shape
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    cf = capacity_factor if capacity_factor is not None else cfg.capacity_factor
+    T = B * L
+    xt = x.reshape(T, d)
+
+    logits = (xt @ params["w_router"]).astype(jnp.float32)       # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(logits, K)             # (T, K)
+    gates = jax.nn.softmax(gate_vals, axis=-1)                   # renorm top-k
+
+    # ---- load-balance aux loss (Switch): E * mean(frac_tokens * mean_prob)
+    onehot = jax.nn.one_hot(expert_ids[:, 0], E, dtype=jnp.float32)
+    frac_tokens = onehot.mean(axis=0)
+    mean_prob = probs.mean(axis=0)
+    aux = E * jnp.sum(frac_tokens * mean_prob) * cfg.router_aux_coef
+
+    # ---- capacity dispatch
+    capacity = int(np.ceil(T * K / E * cf))
+    flat_expert = expert_ids.reshape(-1)                          # (T*K,)
+    flat_token = jnp.repeat(jnp.arange(T), K)
+    flat_gate = gates.reshape(-1)
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_gate = flat_gate[order]
+    # rank within expert group
+    counts = jnp.bincount(sorted_expert, length=E)
+    group_start = jnp.cumsum(counts) - counts
+    rank = jnp.arange(T * K) - group_start[sorted_expert]
+    keep = rank < capacity
+    slot = sorted_expert * capacity + jnp.where(keep, rank, 0)
+
+    # gather tokens -> (E*capacity, d); dropped slots read token 0, masked
+    buf_tok = jnp.zeros((E * capacity,), jnp.int32).at[slot].set(
+        jnp.where(keep, sorted_token, 0).astype(jnp.int32))
+    buf_mask = jnp.zeros((E * capacity,), jnp.float32).at[slot].set(
+        keep.astype(jnp.float32))
+    x_e = (xt[buf_tok] * buf_mask[:, None]).reshape(E, capacity, d)
+
+    y_e = _expert_ffn(params, cfg, x_e).reshape(E * capacity, d)
+
+    # combine: scatter-add weighted outputs back to tokens
+    contrib = jnp.zeros((T, d), y_e.dtype).at[
+        jnp.where(keep, sorted_token, T)  # dropped -> scratch row T
+    ].add(jnp.where(keep, sorted_gate, 0.0)[:, None].astype(y_e.dtype)
+          * y_e[jnp.where(keep, slot, 0)],
+          mode="drop")
+    y = contrib.reshape(B, L, d)
+
+    if cfg.num_shared_experts > 0:
+        y = y + mlp_apply(params["shared"], x, cfg.mlp_act)
+    return y.astype(x.dtype), aux

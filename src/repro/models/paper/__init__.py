@@ -1,0 +1,2 @@
+from repro.models.paper.models import (Model, femnist_cnn, char_lstm,
+                                       sent_lstm, rec_lr, rec_nn)

@@ -1,0 +1,144 @@
+"""Mamba2 block (SSD form) — forward (chunked scan) and one-token decode.
+
+Structure (arXiv:2405.21060):
+  in_proj x -> [z | xc | B | C | dt]   (gate, conv channels, proj, step)
+  causal depthwise conv over [xc|B|C] + silu
+  SSD scan over per-head (x, dt, A, B, C)
+  gated RMSNorm (y * silu(z)), out_proj
+
+ngroups = 1 (B/C shared across heads). Decode carries a conv ring state
+(last conv_width-1 inputs) and the (nh, hp, N) SSM state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd import ops as ssd_ops
+from repro.models.layers import Rng, dense_init, rmsnorm, rmsnorm_init
+
+
+def _dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = cfg.ssm_heads
+    hp = cfg.ssm_head_dim
+    assert nh * hp == d_in, (nh, hp, d_in)
+    N = cfg.ssm_state
+    conv_dim = d_in + 2 * N
+    return d_in, nh, hp, N, conv_dim
+
+
+def mamba_init(rng: Rng, cfg, dtype):
+    d = cfg.d_model
+    d_in, nh, hp, N, conv_dim = _dims(cfg)
+    proj_out = 2 * d_in + 2 * N + nh          # z, xc, B, C, dt
+    p = {
+        "w_in": dense_init(rng, d, proj_out, dtype),
+        "conv_w": (jax.random.normal(rng.next(), (cfg.conv_width, conv_dim),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),     # A = -exp(A_log) = -1
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),  # softplus ~ 0.12
+        "norm": rmsnorm_init(d_in, dtype),
+        "w_out": dense_init(rng, d_in, d, dtype),
+    }
+    return p
+
+
+def _split_proj(cfg, proj):
+    d_in, nh, hp, N, _ = _dims(cfg)
+    z, xc, Bm, Cm, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+    return z, xc, Bm, Cm, dt
+
+
+def _causal_conv(params, xbc, cfg):
+    """Depthwise causal conv over (B, L, conv_dim)."""
+    W = cfg.conv_width
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for w in range(W):
+        out = out + pad[:, w:w + xbc.shape[1]] * params["conv_w"][W - 1 - w]
+    return out + params["conv_b"]
+
+
+def mamba_forward(params, cfg, x, *, ssd_impl: str | None = None,
+                  return_cache: bool = False):
+    """x: (B, L, d) -> (B, L, d) via the chunked SSD scan.
+
+    With return_cache, also returns the decode cache after the last token
+    (conv tail + final SSM state) for prefill -> decode handoff."""
+    Bsz, L, _ = x.shape
+    d_in, nh, hp, N, conv_dim = _dims(cfg)
+    proj = x @ params["w_in"]
+    z, xc, Bm, Cm, dt = _split_proj(cfg, proj)
+    xbc_pre = jnp.concatenate([xc, Bm, Cm], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(params, xbc_pre, cfg))
+    xc, Bm, Cm = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    xh = xc.reshape(Bsz, L, nh, hp)
+    # pad L to a chunk multiple; dt=0 padding is exact (decay 1, no input)
+    chunk = min(cfg.ssm_chunk, L)
+    pad = (-L) % chunk
+    if pad:
+        xh_p = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm_p = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm_p = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    else:
+        xh_p, dt_p, Bm_p, Cm_p = xh, dt, Bm, Cm
+    out = ssd_ops.ssd_chunked(xh_p, dt_p, A, Bm_p, Cm_p, chunk=chunk,
+                              impl=ssd_impl, return_final_state=return_cache)
+    if return_cache:
+        y, state = out
+    else:
+        y = out
+    if pad:
+        y = y[:, :L]
+    y = (y + xh * params["D"][None, None, :, None]).astype(x.dtype)
+    y = y.reshape(Bsz, L, d_in)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    y = y @ params["w_out"]
+    if return_cache:
+        cache = {"conv": xbc_pre[:, -(cfg.conv_width - 1):], "state": state}
+        return y, cache
+    return y
+
+
+def mamba_init_cache(cfg, batch: int, dtype):
+    d_in, nh, hp, N, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, nh, hp, N), jnp.float32),
+    }
+
+
+def mamba_decode(params, cfg, x, cache):
+    """One-token decode. x: (B, 1, d)."""
+    Bsz = x.shape[0]
+    d_in, nh, hp, N, conv_dim = _dims(cfg)
+    proj = x[:, 0] @ params["w_in"]
+    z, xc, Bm, Cm, dt = _split_proj(cfg, proj)
+    xbc = jnp.concatenate([xc, Bm, Cm], axis=-1)   # (B, conv_dim)
+    # conv ring: full window = [cache, new]
+    window = jnp.concatenate([cache["conv"],
+                              xbc[:, None, :].astype(cache["conv"].dtype)],
+                             axis=1)               # (B, W, conv_dim)
+    # forward conv applies conv_w[lag] to x[t-lag]; window[i] holds lag
+    # (W-1-i), so the kernel is flipped here to match (see _causal_conv)
+    conv_out = (jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                           params["conv_w"][::-1].astype(jnp.float32))
+                + params["conv_b"].astype(jnp.float32))
+    xbc_act = jax.nn.silu(conv_out).astype(x.dtype)
+    xc2, Bm2, Cm2 = jnp.split(xbc_act, [d_in, d_in + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    xh = xc2.reshape(Bsz, nh, hp)
+    y, state = ssd_ops.ssd_decode_step(cache["state"], xh, dt, A, Bm2, Cm2)
+    y = (y + xh * params["D"][None, :, None]).astype(x.dtype)
+    y = y.reshape(Bsz, d_in)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = (y @ params["w_out"])[:, None, :]
+    return out, {"conv": window[:, 1:], "state": state}

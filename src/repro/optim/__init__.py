@@ -1,0 +1,1 @@
+from repro.optim.optimizers import Optimizer, sgd, adam, adamw, clip_by_global_norm

@@ -1,0 +1,102 @@
+"""Pure-JAX optimizers (no optax in this environment).
+
+An Optimizer is an (init, update) pair over parameter pytrees:
+
+    opt = adam(1e-3)
+    state = opt.init(params)
+    new_params, new_state = opt.update(params, grads, state)
+
+States are pytrees so they shard/checkpoint like parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.pytree import tree_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]
+    name: str = "optimizer"
+
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {"step": jnp.zeros((), jnp.int32)}
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(jnp.zeros_like, params),
+        }
+
+    def update(params, grads, state):
+        if momentum == 0.0:
+            new_params = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+            return new_params, {"step": state["step"] + 1}
+        mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+        new_params = jax.tree.map(lambda p, m: p - lr * m.astype(p.dtype), params, mu)
+        return new_params, {"step": state["step"] + 1, "mu": mu}
+
+    return Optimizer(init, update, name=f"sgd(lr={lr},mom={momentum})")
+
+
+def adam(
+    lr: float,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    state_dtype=jnp.float32,
+) -> Optimizer:
+    """Adam / AdamW (decoupled weight decay when weight_decay > 0).
+
+    state_dtype: dtype of the m/v moments — bfloat16 halves optimizer
+    memory (perf lever for the 340B config; see EXPERIMENTS.md §Perf)."""
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=state_dtype), params),
+            "v": jax.tree.map(lambda p: jnp.zeros_like(p, dtype=state_dtype), params),
+        }
+
+    def update(params, grads, state):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        m = jax.tree.map(
+            lambda m_, g: (b1 * m_.astype(jnp.float32)
+                           + (1 - b1) * g.astype(jnp.float32)
+                           ).astype(state_dtype), state["m"], grads)
+        v = jax.tree.map(
+            lambda v_, g: (b2 * v_.astype(jnp.float32)
+                           + (1 - b2) * jnp.square(g.astype(jnp.float32))
+                           ).astype(state_dtype), state["v"], grads)
+        mhat_scale = 1.0 / (1 - b1 ** t)
+        vhat_scale = 1.0 / (1 - b2 ** t)
+
+        def upd(p, m_, v_):
+            u = (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps)
+            if weight_decay > 0.0:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update, name=f"adam(lr={lr})")
+
+
+def adamw(lr: float, weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, **kw)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = tree_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), norm

@@ -1,0 +1,2 @@
+from repro.sharding.rules import (param_pspecs, batch_pspec, cache_pspecs,
+                                  state_pspecs, POD_AXIS, DATA_AXIS, MODEL_AXIS)

@@ -1,0 +1,33 @@
+"""Ambient mesh context for model-internal sharding decisions.
+
+Model code (shard_map EP-MoE, activation sharding constraints) needs the
+mesh at trace time, but model functions are pure and config-driven. The
+launcher / dry-run sets the ambient mesh here before tracing; model code
+reads it. `None` (default, e.g. in CPU smoke tests) disables all
+mesh-dependent paths.
+"""
+from __future__ import annotations
+
+import contextlib
+
+_MESH = None
+
+
+def set_mesh(mesh) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh():
+    return _MESH
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    global _MESH
+    prev = _MESH
+    _MESH = mesh
+    try:
+        yield
+    finally:
+        _MESH = prev

@@ -1,0 +1,188 @@
+"""Sharding rules: parameter-path -> PartitionSpec.
+
+Strategy (baseline, see EXPERIMENTS.md §Perf for the optimized variants):
+  - 2-D parameter sharding: the "contract" dim of every large matmul is
+    FSDP-sharded over DATA (and, in multi-pod meshes, jointly over
+    POD+DATA), the "parallel" dim (heads / d_ff / vocab / latents) is
+    tensor-sharded over MODEL. XLA GSPMD inserts the per-layer
+    all-gathers (FSDP) and the attention/MLP all-reduces (TP).
+  - stacked-layer params (leading scan dim) and stacked-expert params
+    (leading E dim) get the same rule right-aligned to their trailing
+    dims; leading dims are unsharded (TP-MoE baseline).
+  - small params (norms, biases <~ d_model, scalars) are replicated.
+
+Rules are right-aligned: a rule (a, b) applied to a rank-4 leaf yields
+(None, None, a, b).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+POD_AXIS = "pod"
+DATA_AXIS = "data"
+MODEL_AXIS = "model"
+
+
+def fsdp_axes(mesh) -> tuple:
+    """FSDP shards over data (and pod when present)."""
+    if POD_AXIS in mesh.axis_names:
+        return (POD_AXIS, DATA_AXIS)
+    return (DATA_AXIS,)
+
+
+def batch_axes(mesh) -> tuple:
+    return fsdp_axes(mesh)
+
+
+# rule tables: leaf name -> right-aligned axis tuple
+# "F" placeholder = FSDP axes, "M" = model axis, None = replicated dim
+_COL_PARALLEL = {  # (d_in [F], d_out [M])
+    "wq", "wk", "wv", "w_uq", "w_uk", "w_uv", "w_gate", "w_up", "w_in",
+    "lm_head", "mod_proj", "w_dq",
+}
+_ROW_PARALLEL = {  # (d_in [M], d_out [F])
+    "wo", "w_down", "w_out",
+}
+_VOCAB_MAJOR = {"embed"}          # (vocab [M], d [F])
+_REPLICATED_2D = {"w_router", "w_dkv", "w_kpe", "conv_w",
+                  "w", "w1", "w2"}  # small / paper models
+_MODEL_VEC = {"bq", "bk", "bv", "conv_b"}  # 1-d aligned with a M-sharded dim
+_HEAD_VEC = {"A_log", "D", "dt_bias"}      # per-ssm-head vectors
+
+
+def _rule_for(name: str, shape) -> tuple:
+    if name in _COL_PARALLEL:
+        return ("F", "M")
+    if name in _ROW_PARALLEL:
+        return ("M", "F")
+    if name in _VOCAB_MAJOR:
+        return ("M", "F")
+    if name in _MODEL_VEC:
+        return ("M",)
+    if name in _HEAD_VEC:
+        return ("M",)
+    return ()
+
+
+def _materialize(rule: tuple, rank: int, mesh, shape) -> P:
+    F = fsdp_axes(mesh)
+    axes: list = [None] * rank
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for i, a in enumerate(rule):
+        dim = rank - len(rule) + i
+        if dim < 0:
+            continue
+        if a == "F":
+            size = int(np.prod([mesh_sizes[x] for x in F]))
+            if shape[dim] % size == 0:
+                axes[dim] = F if len(F) > 1 else F[0]
+        elif a == "M":
+            if shape[dim] % mesh_sizes[MODEL_AXIS] == 0:
+                axes[dim] = MODEL_AXIS
+    return P(*axes)
+
+
+def param_pspecs(params, mesh, *, mode: str = "train"):
+    """PartitionSpec pytree matching `params` (path-name based rules).
+
+    mode="train": 2-D FSDP("data")+TP("model") sharding (default).
+    mode="serve_tp": TP only — weights replicated over the data axis so
+    decode steps never all-gather weights (perf lever for small/medium
+    archs whose weights fit at 1/16 per chip; EXPERIMENTS.md §Perf H1).
+
+    Divisibility guard: a dim that does not divide by its target axis size
+    stays replicated (e.g. 15-head smollm attention on a 16-way model
+    axis, odd vocab sizes)."""
+
+    def leaf_spec(path, leaf):
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        rule = _rule_for(name, leaf.shape)
+        if mode == "serve_tp":
+            rule = tuple(None if a == "F" else a for a in rule)
+        return _materialize(rule, leaf.ndim, mesh, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def state_pspecs(state, params_spec, mesh):
+    """Specs for the train state {phi: {theta[, alpha]}, opt: {...}}.
+
+    φ's leaves (theta, and alpha for Meta-SGD) mirror the parameter specs;
+    optimizer moments (m, v, mu) mirror φ; scalar counters replicate."""
+    phi_spec = {k: params_spec for k in state["phi"]}
+    opt_spec = {}
+    for k in state["opt"]:
+        opt_spec[k] = P() if k == "step" else phi_spec
+    return {"phi": phi_spec, "opt": opt_spec}
+
+
+def batch_pspec(mesh, ndim: int, *, batch_dim: int = 0) -> P:
+    """Shard the batch dim over pod+data; everything else replicated."""
+    axes: list = [None] * ndim
+    B = batch_axes(mesh)
+    axes[batch_dim] = B if len(B) > 1 else B[0]
+    return P(*axes)
+
+
+def cache_pspecs(cache, mesh, *, batch_sharded: bool = True,
+                 seq_shard: bool = False):
+    """Decode-cache specs: batch dim over pod+data (when divisible),
+    head/width dims over model. Cache layouts (see models/attention.py):
+      k/v:   (B, C, Kv, hd)   -> (B_ax, None, model, None)
+      c:     (B, C, R)        -> (B_ax, None, model)
+      kpe:   (B, C, rope)     -> (B_ax, None, None)
+      conv:  (B, W-1, conv_d) -> (B_ax, None, model)
+      state: (B, nh, hp, N)   -> (B_ax, model, None, None)
+      enc_out: (B, T, d)      -> (B_ax, None, None)
+
+    seq_shard=True (perf lever, EXPERIMENTS.md §Perf H1 iter 2): shard the
+    cache *length* dim over the model axis instead of kv heads — when
+    kv_heads < model-axis size the head sharding is impossible and the
+    cache otherwise replicates 16x; length sharding turns decode attention
+    into a flash-decode-style partial softmax that XLA completes with
+    small stat collectives.
+    """
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    B_ax = batch_axes(mesh)
+    bsz_div = int(np.prod([mesh_sizes[a] for a in B_ax]))
+    m_div = mesh_sizes[MODEL_AXIS]
+
+    def spec(path, leaf):
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        rank = leaf.ndim
+        # leading (n_reps,) stacking inside "stack" adds one dim
+        stacked = rank > {"k": 4, "v": 4, "c": 3, "kpe": 3, "conv": 3,
+                          "state": 4, "enc_out": 3}.get(name, rank)
+        axes: list = [None] * rank
+        bdim = 1 if stacked else 0
+        if name == "length":
+            return P()
+        if batch_sharded and leaf.shape[bdim] % bsz_div == 0:
+            axes[bdim] = B_ax if len(B_ax) > 1 else B_ax[0]
+        if seq_shard and name in ("k", "v", "c", "kpe", "enc_out"):
+            ldim = bdim + 1               # cache length dim
+            if leaf.shape[ldim] % m_div == 0:
+                axes[ldim] = MODEL_AXIS
+            return P(*axes)
+        mdim = {"k": 2, "v": 2, "c": 2, "conv": 2, "state": 1}.get(name)
+        if mdim is not None:
+            mdim = mdim + (1 if stacked else 0)
+            if name in ("c",):            # (B, C, R): R over model
+                pass                       # R stays unsharded in baseline
+            elif leaf.shape[mdim] % m_div == 0:
+                axes[mdim] = MODEL_AXIS
+        return P(*axes)
+
+    return jax.tree_util.tree_map_with_path(spec, cache)

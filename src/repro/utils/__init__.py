@@ -1,0 +1,11 @@
+from repro.utils.pytree import (
+    tree_add,
+    tree_scale,
+    tree_sub,
+    tree_zeros_like,
+    tree_size,
+    tree_bytes,
+    tree_norm,
+    tree_cast,
+    tree_any_nan,
+)

@@ -1,0 +1,58 @@
+"""Pytree utilities used across the framework (pure JAX, no deps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_size(a) -> int:
+    """Total number of elements across all leaves."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(a))
+
+
+def tree_bytes(a) -> int:
+    """Total bytes across all leaves (honours per-leaf dtype)."""
+    total = 0
+    for x in jax.tree.leaves(a):
+        total += int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+    return total
+
+
+def tree_norm(a):
+    """Global L2 norm of a pytree."""
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(a)]
+    return jnp.sqrt(sum(leaves))
+
+
+def tree_cast(a, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), a)
+
+
+def tree_any_nan(a):
+    flags = [jnp.any(~jnp.isfinite(x)) for x in jax.tree.leaves(a)
+             if jnp.issubdtype(x.dtype, jnp.floating)]
+    if not flags:
+        return jnp.asarray(False)
+    return jnp.any(jnp.stack(flags))
+
+
+def tree_axpy(alpha, x, y):
+    """y + alpha * x, leafwise."""
+    return jax.tree.map(lambda xi, yi: yi + alpha * xi, x, y)

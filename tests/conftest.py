@@ -1,0 +1,11 @@
+import numpy as np
+import pytest
+
+# NOTE: deliberately no XLA_FLAGS device-count override here — smoke tests
+# and benches must see the real single CPU device (the 512-device override
+# lives exclusively inside repro/launch/dryrun.py, per the launch rules).
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(0)

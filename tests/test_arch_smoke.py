@@ -1,0 +1,142 @@
+"""Per-architecture smoke tests (assignment requirement): instantiate the
+REDUCED variant of each family (<=2 layers or one pattern period,
+d_model<=256, <=4 experts) and run one forward + one FedMeta train step on
+CPU, asserting output shapes and finiteness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs, reduced_config
+from repro.launch.steps import make_train_step
+from repro.models import (init_decode_cache, init_lm, lm_apply,
+                          lm_decode_step)
+
+ARCHS = list_archs()
+
+
+def _inputs(cfg, rng, B=2, L=16):
+    tokens = jnp.asarray(rng.randint(0, cfg.vocab_size, (B, L)), jnp.int32)
+    embeds = None
+    if cfg.modality is not None:
+        embeds = jnp.asarray(
+            rng.normal(0, 0.1, (B, cfg.num_modality_tokens, cfg.d_model)),
+            jnp.float32)
+    return tokens, embeds
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_finite(arch, rng):
+    cfg = reduced_config(get_config(arch))
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    tokens, embeds = _inputs(cfg, rng)
+    logits, aux = lm_apply(params, cfg, tokens, modality_embeds=embeds)
+    n_mod = cfg.num_modality_tokens if cfg.modality == "vision" else 0
+    assert logits.shape == (2, 16 + n_mod, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step(arch, rng):
+    cfg = reduced_config(get_config(arch))
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    enc_out = (jnp.zeros((2, 8, cfg.d_model), jnp.float32)
+               if cfg.is_encoder_decoder else None)
+    cache = init_decode_cache(cfg, 2, 32, enc_out=enc_out, full=False)
+    tok = jnp.asarray(rng.randint(0, cfg.vocab_size, (2, 1)), jnp.int32)
+    logits, cache2 = lm_decode_step(params, cfg, tok, cache)
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert int(cache2["length"]) == 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_fedmeta_train_step(arch, rng):
+    """One FedMeta (FOMAML) meta-train step on the reduced config: loss
+    finite, params actually move, no NaNs anywhere in the state."""
+    cfg = reduced_config(get_config(arch))
+    train_step, init_state, _, _ = make_train_step(
+        cfg, algo_name="fomaml", inner_lr=0.05, outer_lr=1e-3)
+    state = init_state(jax.random.PRNGKey(0))
+    G, C, S, L = 1, 2, 2, 16
+    def part():
+        leaf = {"tokens": jnp.asarray(
+            rng.randint(0, cfg.vocab_size, (G, C, S, L)), jnp.int32)}
+        if cfg.modality is not None:
+            leaf["embeds"] = jnp.asarray(
+                rng.normal(0, 0.1, (G, C, S, cfg.num_modality_tokens,
+                                    cfg.d_model)), jnp.float32)
+        return leaf
+    batch = {"support": part(), "query": part()}
+    new_state, metrics = jax.jit(train_step)(state, batch)
+    assert bool(jnp.isfinite(metrics["query_loss"]))
+    # params moved
+    before = np.asarray(jax.tree.leaves(state["phi"]["theta"])[0])
+    after = np.asarray(jax.tree.leaves(new_state["phi"]["theta"])[0])
+    assert not np.allclose(before, after)
+    # nothing became NaN
+    for leaf in jax.tree.leaves(new_state):
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+def test_prefill_decode_consistency(rng):
+    """Prefill-then-decode equals full forward at the next position
+    (granite reduced, full-precision)."""
+    cfg = reduced_config(get_config("granite-3-2b"))
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    B, L = 1, 24
+    tokens = jnp.asarray(rng.randint(0, cfg.vocab_size, (B, L + 1)), jnp.int32)
+    # full forward logits at position L-1 predict token L
+    full_logits, _ = lm_apply(params, cfg, tokens, remat=False)
+    # prefill first L tokens (capacity > L so decode appends, not wraps),
+    # then decode token L
+    logits_pre, aux, cache = lm_apply(params, cfg, tokens[:, :L], remat=False,
+                                      collect_cache=True, logits_mode="last",
+                                      cache_capacity=L + 4)
+    np.testing.assert_allclose(np.asarray(logits_pre[:, 0]),
+                               np.asarray(full_logits[:, L - 1]),
+                               rtol=1e-4, atol=1e-4)
+    dec_logits, _ = lm_decode_step(params, cfg, tokens[:, L:L + 1], cache)
+    np.testing.assert_allclose(np.asarray(dec_logits[:, 0]),
+                               np.asarray(full_logits[:, L]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_prefill_decode_consistency_mamba(rng):
+    """Same handoff check through the SSM state path (mamba2 reduced)."""
+    cfg = reduced_config(get_config("mamba2-370m"))
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    B, L = 1, 32
+    tokens = jnp.asarray(rng.randint(0, cfg.vocab_size, (B, L + 1)), jnp.int32)
+    full_logits, _ = lm_apply(params, cfg, tokens, remat=False)
+    _, _, cache = lm_apply(params, cfg, tokens[:, :L], remat=False,
+                           collect_cache=True, logits_mode="last")
+    dec_logits, _ = lm_decode_step(params, cfg, tokens[:, L:L + 1], cache)
+    np.testing.assert_allclose(np.asarray(dec_logits[:, 0]),
+                               np.asarray(full_logits[:, L]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_sliding_window_ring_decode(rng):
+    """SWA ring cache: decode after prefill matches a full forward whose
+    attention is windowed (mixtral reduced, window < seq). capacity_factor
+    is raised to E/K so MoE capacity dropping (which is batch-dependent by
+    design) cannot differ between the two paths."""
+    import dataclasses
+    cfg = reduced_config(get_config("mixtral-8x22b"))
+    cfg = dataclasses.replace(
+        cfg, capacity_factor=cfg.num_experts / cfg.num_experts_per_tok)
+    assert cfg.sliding_window == 64
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    B, L = 1, 96   # longer than the 64-token window
+    tokens = jnp.asarray(rng.randint(0, cfg.vocab_size, (B, L + 1)), jnp.int32)
+    full_logits, _ = lm_apply(params, cfg, tokens, remat=False)
+    _, _, cache = lm_apply(params, cfg, tokens[:, :L], remat=False,
+                           collect_cache=True, logits_mode="last")
+    assert cache["stack"]["pos0"]["k"].shape[2] == 64   # ring capacity
+    dec_logits, _ = lm_decode_step(params, cfg, tokens[:, L:L + 1], cache)
+    np.testing.assert_allclose(np.asarray(dec_logits[:, 0]),
+                               np.asarray(full_logits[:, L]),
+                               rtol=2e-3, atol=2e-3)

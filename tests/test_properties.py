@@ -1,0 +1,107 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import make_algorithm, softmax_xent
+from repro.core.fedmeta import federated_meta_step
+from repro.kernels.attention.ref import mha_reference
+from repro.kernels.ssd.ref import ssd_chunked_ref, ssd_sequential
+from repro.optim import sgd
+
+
+def quad_loss(params, batch):
+    return 0.5 * jnp.sum(jnp.square(params["w"] - batch))
+
+
+def quad_eval(params, batch):
+    return quad_loss(params, batch), {"accuracy": jnp.zeros(())}
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), alpha=st.floats(1e-3, 0.5),
+       dim=st.integers(1, 16))
+def test_maml_reduces_to_fomaml_as_second_order_vanishes(seed, alpha, dim):
+    """For the quadratic task, MAML grad = (1-α)·FOMAML grad exactly —
+    the second-order correction is the (1-α) Jacobian factor."""
+    r = np.random.RandomState(seed)
+    theta = {"w": jnp.asarray(r.normal(0, 1, (dim,)), jnp.float32)}
+    c_s = jnp.asarray(r.normal(0, 1, (dim,)), jnp.float32)
+    c_q = jnp.asarray(r.normal(0, 1, (dim,)), jnp.float32)
+    maml = make_algorithm("maml", quad_loss, quad_eval, inner_lr=alpha)
+    fo = make_algorithm("fomaml", quad_loss, quad_eval, inner_lr=alpha)
+    g2, _ = maml.client_grad({"theta": theta}, c_s, c_q)
+    g1, _ = fo.client_grad({"theta": theta}, c_s, c_q)
+    np.testing.assert_allclose(np.asarray(g2["theta"]["w"]),
+                               (1 - alpha) * np.asarray(g1["theta"]["w"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), m=st.integers(1, 6))
+def test_aggregation_weight_scale_invariance(seed, m):
+    """Scaling all aggregation weights by a constant leaves the round
+    unchanged (weights normalize)."""
+    r = np.random.RandomState(seed)
+    theta = {"w": jnp.asarray(r.normal(0, 1, (4,)), jnp.float32)}
+    sup = jnp.asarray(r.normal(0, 1, (m, 4)), jnp.float32)
+    qry = jnp.asarray(r.normal(0, 1, (m, 4)), jnp.float32)
+    w = jnp.asarray(r.uniform(0.1, 5.0, (m,)), jnp.float32)
+    algo = make_algorithm("maml", quad_loss, quad_eval, inner_lr=0.1)
+    opt = sgd(1.0)
+    phi = {"theta": theta}
+    a, _, _ = federated_meta_step(algo, opt, phi, opt.init(phi), sup, qry, w)
+    b, _, _ = federated_meta_step(algo, opt, phi, opt.init(phi), sup, qry,
+                                  w * 7.3)
+    np.testing.assert_allclose(np.asarray(a["theta"]["w"]),
+                               np.asarray(b["theta"]["w"]), rtol=1e-5,
+                               atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       L=st.sampled_from([16, 32, 64]),
+       chunk=st.sampled_from([4, 8, 16]))
+def test_ssd_chunking_invariance(seed, L, chunk):
+    """Chunked SSD equals the sequential recurrence for any chunk size."""
+    r = np.random.RandomState(seed)
+    x = jnp.asarray(r.normal(0, 1, (1, L, 2, 4)), jnp.float32)
+    dt = jnp.asarray(np.log1p(np.exp(r.normal(-1, 0.5, (1, L, 2)))),
+                     jnp.float32)
+    A = jnp.asarray(-np.exp(r.normal(0, 0.3, (2,))), jnp.float32)
+    Bm = jnp.asarray(r.normal(0, 1, (1, L, 8)), jnp.float32)
+    Cm = jnp.asarray(r.normal(0, 1, (1, L, 8)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(ssd_chunked_ref(x, dt, A, Bm, Cm, chunk)),
+        np.asarray(ssd_sequential(x, dt, A, Bm, Cm)),
+        rtol=5e-4, atol=5e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scale=st.floats(0.1, 3.0))
+def test_attention_softmax_shift_invariance(seed, scale):
+    """Adding a constant to all key vectors along a rank-1 direction of q
+    leaves attention unchanged iff it shifts all scores equally — check
+    softmax shift invariance via explicit score offset."""
+    r = np.random.RandomState(seed)
+    B, L, H, hd = 1, 8, 2, 16
+    q = jnp.asarray(r.normal(0, 1, (B, L, H, hd)), jnp.float32)
+    k = jnp.asarray(r.normal(0, 1, (B, L, H, hd)), jnp.float32)
+    v = jnp.asarray(r.normal(0, 1, (B, L, H, hd)), jnp.float32)
+    base = mha_reference(q, k, v, causal=True)
+    # scaling q and k jointly by s and 1/s preserves scores
+    out = mha_reference(q * scale, k / scale, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                               rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), C=st.integers(2, 32))
+def test_xent_uniform_logits(seed, C):
+    """Cross entropy of uniform logits is log C for any labels."""
+    r = np.random.RandomState(seed)
+    labels = jnp.asarray(r.randint(0, C, (7,)), jnp.int32)
+    logits = jnp.zeros((7, C), jnp.float32)
+    np.testing.assert_allclose(float(softmax_xent(logits, labels)),
+                               np.log(C), rtol=1e-5)

@@ -1,0 +1,143 @@
+"""Substrate tests: optimizers, checkpoint round-trip, data generators,
+communication accounting, FedAvg invariants."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.data import (make_femnist, make_recommend, make_sent140,
+                        make_shakespeare, sample_task_batch)
+from repro.data.federated import support_query_split
+from repro.federated.comm import CommTracker
+from repro.federated.fedavg import FedAvgTrainer
+from repro.optim import adam, clip_by_global_norm, sgd
+from repro.utils.pytree import tree_bytes, tree_size
+
+
+def test_sgd_step():
+    opt = sgd(0.5)
+    p = {"w": jnp.asarray([2.0, -2.0])}
+    g = {"w": jnp.asarray([1.0, 1.0])}
+    p2, st = opt.update(p, g, opt.init(p))
+    np.testing.assert_allclose(np.asarray(p2["w"]), [1.5, -2.5])
+    assert int(st["step"]) == 1
+
+
+def test_adam_converges_quadratic():
+    opt = adam(0.1)
+    p = {"w": jnp.asarray([5.0, -3.0])}
+    st = opt.init(p)
+    loss = lambda p: jnp.sum(jnp.square(p["w"]))
+    for _ in range(300):
+        g = jax.grad(loss)(p)
+        p, st = opt.update(p, g, st)
+    assert float(loss(p)) < 1e-4
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 5.0) < 1e-5
+    total = jnp.sqrt(clipped["a"] ** 2 + clipped["b"] ** 2)
+    np.testing.assert_allclose(np.asarray(total), [1.0], rtol=1e-5)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.asarray([1, 2], jnp.int32), "d": 7},
+            "e": [jnp.ones((2,)), {"f": jnp.zeros((1,))}],
+            "scalar": 3.5}
+    path = os.path.join(tmp_path, "ckpt")
+    save_pytree(path, tree)
+    back = load_pytree(path)
+    assert back["b"]["d"] == 7 and back["scalar"] == 3.5
+    np.testing.assert_array_equal(np.asarray(back["a"]), np.asarray(tree["a"]))
+    np.testing.assert_array_equal(np.asarray(back["e"][0]),
+                                  np.asarray(tree["e"][0]))
+    assert isinstance(back["e"], list)
+
+
+@pytest.mark.parametrize("maker,kw", [
+    (make_femnist, dict(num_clients=8, mean_samples=20)),
+    (make_shakespeare, dict(num_clients=4, mean_samples=40)),
+    (make_sent140, dict(num_clients=8)),
+    (make_recommend, dict(num_clients=5, mean_records=50)),
+])
+def test_dataset_structure(maker, kw):
+    ds = maker(seed=3, **kw)
+    stats = ds.stats()
+    assert stats["clients"] == kw.get("num_clients")
+    assert stats["samples"] > 0
+    for c in ds.clients:
+        assert c.x.shape[0] == c.y.shape[0]
+        assert c.y.min() >= 0 and c.y.max() < ds.num_classes
+    tr, va, te = ds.split_clients(seed=0)
+    assert len(tr) + len(va) + len(te) == stats["clients"]
+
+
+def test_support_query_disjoint(rng):
+    ds = make_sent140(num_clients=3, seed=1)
+    c = ds.clients[0]
+    (sx, sy), (qx, qy) = support_query_split(c, 0.3, rng)
+    assert len(sy) + len(qy) == c.n
+    # disjointness by index construction: totals preserved
+    assert len(sy) == max(1, min(c.n - 1, int(round(0.3 * c.n))))
+
+
+def test_task_batch_shapes_and_weights(rng):
+    ds = make_femnist(num_clients=6, mean_samples=20, seed=0)
+    tb = sample_task_batch(ds.clients, 4, 0.2, 8, 8, rng)
+    assert tb.support_x.shape == (4, 8, 28, 28)
+    assert tb.query_x.shape == (4, 8, 28, 28)
+    np.testing.assert_allclose(tb.weight.sum(), 1.0, rtol=1e-5)
+    assert (tb.weight > 0).all()
+
+
+def test_comm_tracker_accounting():
+    phi = {"theta": {"w": jnp.zeros((1000,), jnp.float32)}}
+    t = CommTracker.for_state(phi, clients_per_round=10,
+                              flops_per_client=1e6)
+    assert t.phi_bytes == 4000
+    t.tick(5)
+    assert t.download_bytes == 5 * 10 * 4000
+    assert t.total_bytes == 2 * 5 * 10 * 4000
+    assert t.total_flops == 5 * 10 * 1e6
+
+
+def test_fedavg_identical_clients_fixed_point(rng):
+    """If every client holds the same data, one FedAvg round equals plain
+    local training (aggregation of identical models is identity)."""
+    x = jnp.asarray(rng.normal(0, 1, (4, 3)), jnp.float32)
+    y = jnp.asarray(rng.randint(0, 2, (4,)), jnp.int32)
+
+    def apply_fn(p, x):
+        return x @ p["w"]
+
+    def loss_fn(p, batch):
+        bx, by = batch
+        logits = apply_fn(p, bx)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, by[:, None], 1))
+
+    eval_fn = lambda p, b: (loss_fn(p, b), {"accuracy": jnp.zeros(())})
+    fa = FedAvgTrainer(loss_fn, eval_fn, local_lr=0.1, local_steps=2,
+                       local_optimizer="sgd")
+    theta = {"w": jnp.asarray(rng.normal(0, 1, (3, 2)), jnp.float32)}
+    single = fa.local_train(
+        theta, jax.tree.map(lambda a: jnp.stack([a, a]), (x, y)))
+    m = 3
+    batch = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None, None],
+                                   (m, 2) + a.shape), (x, y))
+    avg = fa.round_step({"theta": theta}, batch)["theta"]
+    np.testing.assert_allclose(np.asarray(avg["w"]), np.asarray(single["w"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_tree_utils():
+    t = {"a": jnp.zeros((3, 4), jnp.float32), "b": jnp.zeros((5,), jnp.bfloat16)}
+    assert tree_size(t) == 17
+    assert tree_bytes(t) == 3 * 4 * 4 + 5 * 2
