@@ -5,7 +5,8 @@ per-table result lines emitted by each module.
 
   (default) reduced rounds so the suite finishes on 1 CPU core
   --full   paper-scale rounds (hours on CPU)
-  --only   comma-separated subset: kernels,table2,fig3,table3,fairness
+  --only   comma-separated subset:
+           kernels,meta_step,table2,fig3,table3,fairness
 """
 from __future__ import annotations
 
@@ -67,7 +68,8 @@ def _bench_kernels():
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--only", default="kernels,table2,fig3,table3,fairness")
+    ap.add_argument("--only",
+                    default="kernels,meta_step,table2,fig3,table3,fairness")
     ap.add_argument("--rounds", type=int, default=0)
     ap.add_argument("--outdir", default="results/bench")
     args = ap.parse_args()
@@ -79,6 +81,18 @@ def main() -> None:
     if "kernels" in only:
         for name, us, derived in _bench_kernels():
             print(f"{name},{us:.1f},{derived}", flush=True)
+
+    if "meta_step" in only:
+        from benchmarks import meta_step_bench
+        t0 = time.time()
+        # only --full refreshes the repo-root perf-trajectory artifact;
+        # the reduced run must not clobber it with dry-scale numbers
+        out = ("BENCH_meta_step.json" if args.full
+               else os.path.join(args.outdir, "BENCH_meta_step.json"))
+        report = meta_step_bench.run(dry=not args.full, json_out=out)
+        spd = report["summary"].get("wall_speedup_packed_vs_tree_vmap")
+        print(f"meta_step,{(time.time()-t0)*1e6:.0f},"
+              f"packed_speedup={f'{spd:.2f}x' if spd else 'n/a'}", flush=True)
 
     if "table2" in only:
         from benchmarks import table2_leaf

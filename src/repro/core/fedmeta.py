@@ -7,51 +7,113 @@ One meta-training round:
   3. the server updates φ with the (weighted) average of the g_u via the
      outer optimizer (Adam here, per paper A.2).
 
-Two client execution strategies:
+Three client execution strategies (memory/throughput tradeoff in
+DESIGN.md §4):
   - "vmap": all clients in parallel (paper's `for u in parallel`; right
     choice for small models / CPU simulation),
   - "scan": clients sequential with a meta-gradient accumulator carry —
-    the TPU-native, memory-optimal mapping used for the large LM configs
-    (one adapted θ_u lives at a time; see DESIGN.md §4).
+    memory-optimal (one adapted θ_u lives at a time),
+  - "chunked": scan over chunks of vmapped clients — peak memory scales
+    with the chunk size, not clients-per-round, while keeping vmap
+    throughput inside each chunk. m need not divide the chunk size;
+    the tail chunk is padded with zero-weight duplicate clients.
+
+Two parameter representations:
+  - tree (default): φ stays a pytree; aggregation and the outer step run
+    per-leaf,
+  - packed plane (``make_packed_meta_train_step``): φ lives in one flat
+    128-lane-aligned f32 buffer (utils/flat.py); client gradients are
+    packed to an (m, N) block, reduced by the fused aggregation kernel,
+    and φ is advanced by the fused outer-Adam kernel — the whole server
+    side of the round is two passes over flat memory.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.meta_update import ops as mu_ops
+from repro.utils.flat import FlatPlane
 from repro.utils.pytree import tree_add, tree_scale, tree_zeros_like
 
 
+def _normalize_weights(weights, m):
+    if weights is None:
+        return jnp.full((m,), 1.0 / m, jnp.float32)
+    weights = weights.astype(jnp.float32)
+    return weights / jnp.sum(weights)
+
+
+def _chunk_client_axis(support, query, w, m, chunk):
+    """Reshape the leading client axis m -> (n_chunks, chunk), padding the
+    tail with zero-weight copies of client 0 when chunk ∤ m."""
+    pad = (-m) % chunk
+    if pad:
+        idx = jnp.concatenate(
+            [jnp.arange(m), jnp.zeros((pad,), jnp.int32)])
+        support, query = jax.tree.map(lambda x: x[idx], (support, query))
+        w = jnp.concatenate([w, jnp.zeros((pad,), w.dtype)])
+    n_chunks = (m + pad) // chunk
+
+    def split(x):
+        return x.reshape((n_chunks, chunk) + x.shape[1:])
+
+    support, query = jax.tree.map(split, (support, query))
+    return support, query, w.reshape(n_chunks, chunk)
+
+
+def _weighted_metrics(w, mets):
+    """Per-client metrics (leading m axis) -> weighted scalar summary.
+
+    Identical reduction on every client axis, so vmap/scan/chunked report
+    the same numbers (the scan path previously took an unweighted mean)."""
+    return jax.tree.map(lambda x: jnp.sum(w * x), mets)
+
+
 def federated_meta_step(algo, optimizer, phi, opt_state, support, query,
-                        weights=None, *, client_axis: str = "vmap"):
+                        weights=None, *, client_axis: str = "vmap",
+                        client_chunk: int | None = None):
     """support/query: pytrees with leading client axis m on each leaf.
     weights: (m,) aggregation weights (paper A.2 weights by local data
     count); None = uniform 1/m. Returns (phi, opt_state, metrics)."""
     m = jax.tree.leaves(support)[0].shape[0]
-    if weights is None:
-        w = jnp.full((m,), 1.0 / m, jnp.float32)
-    else:
-        w = weights / jnp.sum(weights)
+    w = _normalize_weights(weights, m)
 
     if client_axis == "vmap":
-        gs, metrics = jax.vmap(
+        gs, mets = jax.vmap(
             lambda s, q: algo.client_grad(phi, s, q))(support, query)
         meta_g = jax.tree.map(
             lambda g: jnp.tensordot(w, g.astype(jnp.float32), axes=1), gs)
-        metrics = jax.tree.map(lambda x: jnp.sum(w * x), metrics)
+        metrics = _weighted_metrics(w, mets)
     elif client_axis == "scan":
-        def body(carry, inp):
-            acc, k = carry
+        def body(acc, inp):
             s, q, wi = inp
             g, met = algo.client_grad(phi, s, q)
             acc = tree_add(acc, tree_scale(
                 jax.tree.map(lambda x: x.astype(jnp.float32), g), wi))
-            return (acc, k + 1), met
+            return acc, met
 
         acc0 = tree_zeros_like(
             jax.tree.map(lambda x: x.astype(jnp.float32), phi))
-        (meta_g, _), mets = jax.lax.scan(body, (acc0, 0), (support, query, w))
-        metrics = jax.tree.map(lambda x: jnp.mean(x), mets)
+        meta_g, mets = jax.lax.scan(body, acc0, (support, query, w))
+        metrics = _weighted_metrics(w, mets)
+    elif client_axis == "chunked":
+        chunk = client_chunk or min(m, 8)
+        sup_c, qry_c, w_c = _chunk_client_axis(support, query, w, m, chunk)
+
+        def body(acc, inp):
+            s, q, wc = inp
+            gs, mets = jax.vmap(
+                lambda s_, q_: algo.client_grad(phi, s_, q_))(s, q)
+            partial = jax.tree.map(
+                lambda g: jnp.tensordot(wc, g.astype(jnp.float32), axes=1),
+                gs)
+            return tree_add(acc, partial), _weighted_metrics(wc, mets)
+
+        acc0 = tree_zeros_like(
+            jax.tree.map(lambda x: x.astype(jnp.float32), phi))
+        meta_g, msums = jax.lax.scan(body, acc0, (sup_c, qry_c, w_c))
+        metrics = jax.tree.map(jnp.sum, msums)
     else:
         raise ValueError(client_axis)
 
@@ -59,14 +121,103 @@ def federated_meta_step(algo, optimizer, phi, opt_state, support, query,
     return new_phi, new_opt, metrics
 
 
+def _maybe_jit(step, jit: bool, donate: bool):
+    if not jit:
+        return step
+    # buffer donation lets φ/opt-state update in place; XLA:CPU does not
+    # implement donation and would warn on every call, so gate on backend
+    if donate and jax.default_backend() != "cpu":
+        return jax.jit(step, donate_argnums=(0,))
+    return jax.jit(step)
+
+
 def make_meta_train_step(algo, optimizer, *, client_axis: str = "vmap",
-                         jit: bool = True):
+                         client_chunk: int | None = None, jit: bool = True,
+                         donate: bool = True):
     """-> step(state, support, query, weights) with state = {phi, opt}."""
 
     def step(state, support, query, weights=None):
         phi, opt_state, metrics = federated_meta_step(
             algo, optimizer, state["phi"], state["opt"], support, query,
-            weights, client_axis=client_axis)
+            weights, client_axis=client_axis, client_chunk=client_chunk)
         return {"phi": phi, "opt": opt_state}, metrics
 
-    return jax.jit(step) if jit else step
+    return _maybe_jit(step, jit, donate)
+
+
+# ---- packed parameter plane pipeline ------------------------------------
+
+def init_packed_state(optimizer, plane: FlatPlane, phi):
+    """φ pytree -> {"phi": flat plane, "opt": flat optimizer state}."""
+    from repro.optim.optimizers import make_flat_optimizer
+    flat = plane.pack(phi)
+    return {"phi": flat, "opt": make_flat_optimizer(optimizer).init(flat)}
+
+
+def make_packed_meta_train_step(algo, optimizer, plane: FlatPlane, *,
+                                client_axis: str = "vmap",
+                                client_chunk: int | None = None,
+                                impl: str | None = None,
+                                block_dtype=None, jit: bool = True,
+                                donate: bool = True):
+    """Meta-train step over the packed plane: state = {phi: (N,), opt}.
+
+    φ is unpacked to a pytree exactly once per round (the client model
+    needs structured parameters); everything after the per-client grads —
+    aggregation and the outer Adam — stays on flat buffers. ``impl``
+    picks xla / pallas / pallas_interpret for both fused server kernels
+    (None = the ``REPRO_META_UPDATE_IMPL`` default). ``block_dtype``
+    sets the dtype of the packed client-gradient block (None = f32,
+    exact; bfloat16 halves the aggregation traffic and models a
+    half-precision client upload — the fused ops still accumulate in
+    f32; see DESIGN.md §2).
+    """
+    from repro.optim.optimizers import make_flat_optimizer
+    impl = mu_ops.resolve_impl(impl)
+    flat_opt = make_flat_optimizer(optimizer, impl=impl)
+    bd = block_dtype or jnp.float32
+
+    def step(state, support, query, weights=None):
+        phi = plane.unpack(state["phi"])
+        m = jax.tree.leaves(support)[0].shape[0]
+        w = _normalize_weights(weights, m)
+
+        def one_packed(s, q):
+            g, met = algo.client_grad(phi, s, q)
+            return plane.pack(g, bd), met
+
+        if client_axis == "vmap":
+            G, mets = jax.vmap(one_packed)(support, query)
+            meta_g = mu_ops.weighted_aggregate(G, w, impl=impl)
+            metrics = _weighted_metrics(w, mets)
+        elif client_axis == "scan":
+            def body(acc, inp):
+                s, q, wi = inp
+                g, met = one_packed(s, q)
+                return acc + wi * g.astype(jnp.float32), met
+
+            meta_g, mets = jax.lax.scan(
+                body, plane.zeros(), (support, query, w))
+            metrics = _weighted_metrics(w, mets)
+        elif client_axis == "chunked":
+            chunk = client_chunk or min(m, 8)
+            sup_c, qry_c, w_c = _chunk_client_axis(
+                support, query, w, m, chunk)
+
+            def body(acc, inp):
+                s, q, wc = inp
+                G, mets = jax.vmap(one_packed)(s, q)
+                partial = mu_ops.weighted_aggregate(G, wc, impl=impl)
+                return acc + partial, _weighted_metrics(wc, mets)
+
+            meta_g, msums = jax.lax.scan(
+                body, plane.zeros(), (sup_c, qry_c, w_c))
+            metrics = jax.tree.map(jnp.sum, msums)
+        else:
+            raise ValueError(client_axis)
+
+        new_flat, new_opt = flat_opt.update(state["phi"], meta_g,
+                                            state["opt"])
+        return {"phi": new_flat, "opt": new_opt}, metrics
+
+    return _maybe_jit(step, jit, donate)

@@ -56,7 +56,10 @@ class CommTracker:
 
 
 def measure_client_flops(fn, *args) -> float:
-    """FLOPs of one client call via XLA cost analysis (CPU backend)."""
+    """FLOPs of one client call via XLA cost analysis (CPU backend).
+
+    Returns 0.0 when cost analysis is unavailable — with a warning, so a
+    Fig-3 reproduction cannot silently report zero client compute."""
     import jax
     try:
         compiled = jax.jit(fn).lower(*args).compile()
@@ -64,5 +67,10 @@ def measure_client_flops(fn, *args) -> float:
         if isinstance(cost, list):
             cost = cost[0]
         return float(cost.get("flops", 0.0))
-    except Exception:
+    except Exception as e:
+        import logging
+        logging.getLogger(__name__).warning(
+            "measure_client_flops: XLA cost analysis failed (%s: %s); "
+            "reporting 0.0 client FLOPs — Fig-3 compute numbers will be "
+            "wrong", type(e).__name__, e)
         return 0.0

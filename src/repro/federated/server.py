@@ -15,10 +15,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fedmeta import make_meta_train_step
+from repro.core.fedmeta import (init_packed_state, make_meta_train_step,
+                                make_packed_meta_train_step)
 from repro.data.federated import sample_task_batch
 from repro.federated.comm import CommTracker, measure_client_flops
 from repro.optim import Optimizer
+from repro.utils.flat import plane_for
 
 
 def _batch_eval(eval_one, clients, m, support_frac, support_size, query_size,
@@ -94,10 +96,18 @@ class FederatedTrainer:
     weighted: bool = True          # paper A.2: weight by local data count
     client_axis: str = "vmap"
     seed: int = 0
+    client_chunk: Optional[int] = None   # for client_axis="chunked"
+    packed: bool = False                 # packed parameter plane pipeline
+    impl: Optional[str] = None           # fused-kernel impl for packed
+    block_dtype: Optional[object] = None  # client-grad block dtype (packed)
 
     def __post_init__(self):
-        self._step = make_meta_train_step(self.algo, self.optimizer,
-                                          client_axis=self.client_axis)
+        # the packed step needs φ's FlatPlane, built in init(); the tree
+        # step has no such dependency and is built eagerly
+        self._step = None if self.packed else make_meta_train_step(
+            self.algo, self.optimizer, client_axis=self.client_axis,
+            client_chunk=self.client_chunk)
+        self._plane = None
         self._rng = np.random.RandomState(self.seed)
         self._evaluator = make_meta_evaluator(self.algo)
         self.comm: Optional[CommTracker] = None
@@ -105,9 +115,24 @@ class FederatedTrainer:
 
     def init(self, key, model_init):
         phi = self.algo.init_state(key, model_init)
-        state = {"phi": phi, "opt": self.optimizer.init(phi)}
+        if self.packed:
+            self._plane = plane_for(phi)
+            self._step = make_packed_meta_train_step(
+                self.algo, self.optimizer, self._plane,
+                client_axis=self.client_axis,
+                client_chunk=self.client_chunk, impl=self.impl,
+                block_dtype=self.block_dtype)
+            state = init_packed_state(self.optimizer, self._plane, phi)
+        else:
+            state = {"phi": phi, "opt": self.optimizer.init(phi)}
         self.comm = CommTracker.for_state(phi, self.clients_per_round)
         return state
+
+    def phi_tree(self, state):
+        """φ as a pytree regardless of parameter representation."""
+        if self.packed:
+            return self._plane.unpack(state["phi"])
+        return state["phi"]
 
     def measure_flops(self, state):
         """One-off XLA cost analysis of the client procedure."""
@@ -118,7 +143,7 @@ class FederatedTrainer:
         qry = jax.tree.map(lambda x: jnp.asarray(x[0]),
                            (tb.query_x, tb.query_y))
         fl = measure_client_flops(
-            lambda s, q: self.algo.client_grad(state["phi"], s, q)[0],
+            lambda s, q: self.algo.client_grad(self.phi_tree(state), s, q)[0],
             sup, qry)
         if self.comm:
             self.comm.flops_per_client = fl
@@ -138,7 +163,7 @@ class FederatedTrainer:
             if eval_every and eval_clients is not None and \
                     ((r + 1) % eval_every == 0 or r == rounds - 1):
                 acc, _ = evaluate_meta(
-                    self.algo, state["phi"], eval_clients,
+                    self.algo, self.phi_tree(state), eval_clients,
                     support_frac=self.support_frac,
                     support_size=self.support_size,
                     query_size=self.query_size, seed=self.seed,

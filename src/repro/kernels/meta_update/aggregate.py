@@ -1,0 +1,77 @@
+"""Pallas TPU kernel for fused weighted client-gradient aggregation.
+
+The server step reduces the (m, N) block of packed per-client
+meta-gradients to the (N,) meta-gradient g = Σ_u w_u · g_u (paper A.2
+weights by local data count). Per-leaf XLA emits one broadcast-multiply
+plus reduce per tensor; this kernel makes one sweep over the block —
+each grid step streams an (m, block_rows, 128) slab through VMEM,
+accumulates the weighted sum across the client axis, and writes one
+(block_rows, 128) output tile. Weights live in SMEM and are read as
+scalars inside the client loop.
+
+Inputs come from the packed parameter plane (``utils/flat.py``): N must
+be a multiple of ALIGN = 8 * 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.meta_update.fused import LANE, SUBLANE, choose_block_rows
+
+# VMEM budget for the (m, block_rows, 128) slab: ~2 MiB f32
+_SLAB_BUDGET_ELEMS = 1 << 19
+
+
+def _agg_kernel(w_ref, g_ref, out_ref):
+    m = g_ref.shape[0]
+
+    def body(u, acc):
+        return acc + w_ref[u] * g_ref[u, :, :].astype(jnp.float32)
+
+    acc = jax.lax.fori_loop(
+        0, m, body, jnp.zeros(out_ref.shape, jnp.float32))
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def weighted_aggregate_flat(gs, w, *, interpret: bool = False):
+    """gs: (m, N) packed client gradients, w: (m,) weights -> (N,) f32.
+
+    Computes Σ_u w_u · gs[u] in a single pass; the caller is responsible
+    for weight normalization (fedmeta normalizes once per round).
+    """
+    m, N = gs.shape
+    assert N % (SUBLANE * LANE) == 0, N
+    total_rows = N // LANE
+    max_rows = max(SUBLANE, _SLAB_BUDGET_ELEMS // (LANE * max(m, 1)))
+    rows = choose_block_rows(total_rows, max_rows=max_rows)
+    n_tiles = total_rows // rows
+
+    out = pl.pallas_call(
+        _agg_kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((m, rows, LANE), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((total_rows, LANE), jnp.float32),
+        interpret=interpret,
+    )(w.astype(jnp.float32), gs.reshape(m, total_rows, LANE))
+    return out.reshape(N)
+
+
+def weighted_aggregate_ref(gs, w):
+    """Pure-jnp oracle: w @ gs, accumulating in f32.
+
+    The dot runs in the block's dtype with a f32 accumulator so a
+    reduced-precision (bf16) gradient block is consumed directly —
+    upcasting gs first would materialize a full f32 copy of the block."""
+    return jax.lax.dot_general(
+        w.astype(gs.dtype), gs, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)

@@ -6,9 +6,10 @@ over the full parameter vector — pure memory traffic (3 reads, 1 write,
 kernel streams 128-lane-aligned tiles through VMEM in a single pass,
 which is the roofline-optimal schedule for this op on TPU.
 
-Layout: callers flatten the pytree into one padded (n_tiles * TILE,)
-vector (see ops.py); the kernel is a 1-D grid over (TILE,) blocks
-reshaped to (TILE // 128, 128) for (sublane, lane) alignment.
+Layout: callers hand in the packed parameter plane (`utils/flat.py`) — a
+padded (N,) vector with N a multiple of ALIGN = 8 * 128 — and the kernel
+runs a 1-D grid over (block_rows, 128) tiles, block_rows chosen as the
+largest sublane-aligned divisor of N // 128 up to MAX_BLOCK_ROWS.
 """
 from __future__ import annotations
 
@@ -18,7 +19,20 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-TILE = 8 * 128 * 64          # 64k elements per grid step (~256 KiB f32)
+LANE = 128
+SUBLANE = 8
+MAX_BLOCK_ROWS = 8 * 64      # 64k elements per grid step (~256 KiB f32)
+TILE = MAX_BLOCK_ROWS * LANE  # kept for back-compat with older callers
+
+
+def choose_block_rows(total_rows: int, max_rows: int = MAX_BLOCK_ROWS) -> int:
+    """Largest divisor of ``total_rows`` that is ≤ max_rows and a multiple
+    of SUBLANE (total_rows is guaranteed sublane-aligned by flat.ALIGN)."""
+    assert total_rows % SUBLANE == 0, total_rows
+    k = total_rows // SUBLANE
+    cap = max(1, max_rows // SUBLANE)
+    d = max(x for x in range(1, min(cap, k) + 1) if k % x == 0)
+    return SUBLANE * d
 
 
 def _meta_update_kernel(theta_ref, alpha_ref, g_ref, out_ref):
@@ -29,22 +43,23 @@ def _meta_update_kernel(theta_ref, alpha_ref, g_ref, out_ref):
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def meta_update_flat(theta, alpha, g, *, interpret: bool = False):
-    """theta, alpha, g: flat (N,) with N % TILE == 0. Returns θ − α∘g."""
+    """theta, alpha, g: flat (N,) with N % (8*128) == 0. Returns θ − α∘g."""
     (N,) = theta.shape
-    assert N % TILE == 0, N
-    rows = TILE // 128
-    n_tiles = N // TILE
+    assert N % (SUBLANE * LANE) == 0, N
+    total_rows = N // LANE
+    rows = choose_block_rows(total_rows)
+    n_tiles = total_rows // rows
 
     def reshape(x):
-        return x.reshape(n_tiles * rows, 128)
+        return x.reshape(total_rows, LANE)
 
-    spec = pl.BlockSpec((rows, 128), lambda i: (i, 0))
+    spec = pl.BlockSpec((rows, LANE), lambda i: (i, 0))
     out = pl.pallas_call(
         _meta_update_kernel,
         grid=(n_tiles,),
         in_specs=[spec, spec, spec],
         out_specs=spec,
-        out_shape=jax.ShapeDtypeStruct((n_tiles * rows, 128), theta.dtype),
+        out_shape=jax.ShapeDtypeStruct((total_rows, LANE), theta.dtype),
         interpret=interpret,
     )(reshape(theta), reshape(alpha), reshape(g))
     return out.reshape(N)

@@ -1,60 +1,68 @@
-"""Dispatcher for the fused inner update.
+"""Dispatchers for the fused meta-step ops.
 
-impl: "xla" (tree_map; default), "pallas", "pallas_interpret".
-The pallas path flattens the pytree into one padded vector, runs the
-single-pass kernel, and unflattens — one kernel launch for the whole
-parameter set instead of one op pair per leaf.
+impl: "xla" (tree_map / jnp; default), "pallas", "pallas_interpret",
+selected per-call, via :func:`set_default_impl`, or the
+``REPRO_META_UPDATE_IMPL`` environment variable (see DESIGN.md §5).
+One switch governs all three fused ops — inner update, weighted
+aggregation, outer Adam — so a config flips the whole pipeline.
+
+The pallas paths run on the packed parameter plane (``utils/flat.py``):
+the flattening spec (treedef, offsets, padding) is computed once per
+tree structure and memoized, so repeated calls — e.g. the inner update
+inside every client of every round — never recompute the layout.
 """
 from __future__ import annotations
 
 import os
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels.meta_update import ref
-from repro.kernels.meta_update.fused import TILE, meta_update_flat
+from repro.kernels.meta_update.aggregate import (weighted_aggregate_flat,
+                                                 weighted_aggregate_ref)
+from repro.kernels.meta_update.fused import TILE, meta_update_flat  # noqa: F401 (TILE re-exported)
+from repro.utils.flat import plane_for
 
 _DEFAULT_IMPL = os.environ.get("REPRO_META_UPDATE_IMPL", "xla")
+_IMPLS = ("xla", "pallas", "pallas_interpret")
 
 
 def set_default_impl(impl: str) -> None:
     global _DEFAULT_IMPL
-    assert impl in ("xla", "pallas", "pallas_interpret")
+    assert impl in _IMPLS
     _DEFAULT_IMPL = impl
 
 
-def _flatten_pad(tree, dtype):
-    leaves = jax.tree.leaves(tree)
-    flat = jnp.concatenate([x.reshape(-1).astype(dtype) for x in leaves])
-    pad = (-flat.shape[0]) % TILE
-    if pad:
-        flat = jnp.pad(flat, (0, pad))
-    return flat
+def get_default_impl() -> str:
+    return _DEFAULT_IMPL
 
 
-def _unflatten(tree, flat):
-    leaves, treedef = jax.tree.flatten(tree)
-    out, off = [], 0
-    for x in leaves:
-        n = int(np.prod(x.shape))
-        out.append(flat[off:off + n].reshape(x.shape).astype(x.dtype))
-        off += n
-    return jax.tree.unflatten(treedef, out)
+def resolve_impl(impl: str | None) -> str:
+    impl = impl or _DEFAULT_IMPL
+    assert impl in _IMPLS, impl
+    return impl
 
 
 def meta_update(theta, alpha, grads, *, impl: str | None = None):
     """θ' = θ − α ∘ g; α is a scalar or a pytree matching θ."""
-    impl = impl or _DEFAULT_IMPL
+    impl = resolve_impl(impl)
     if impl == "xla":
         return ref.meta_update_ref(theta, alpha, grads)
-    dtype = jnp.float32
-    t = _flatten_pad(theta, dtype)
+    plane = plane_for(theta)
+    t = plane.pack(theta)
     if isinstance(alpha, (int, float)):
         a = jnp.full_like(t, alpha)
     else:
-        a = _flatten_pad(alpha, dtype)
-    g = _flatten_pad(grads, dtype)
+        a = plane.pack(alpha)
+    g = plane.pack(grads)
     out = meta_update_flat(t, a, g, interpret=(impl == "pallas_interpret"))
-    return _unflatten(theta, out)
+    return plane.unpack(out)
+
+
+def weighted_aggregate(gs, w, *, impl: str | None = None):
+    """(m, N) packed client grads × (m,) weights -> (N,) Σ_u w_u·g_u."""
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        return weighted_aggregate_ref(gs, w)
+    return weighted_aggregate_flat(gs, w,
+                                   interpret=(impl == "pallas_interpret"))

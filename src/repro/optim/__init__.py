@@ -1,1 +1,3 @@
-from repro.optim.optimizers import Optimizer, sgd, adam, adamw, clip_by_global_norm
+from repro.optim.optimizers import (Optimizer, adam, adamw,
+                                    clip_by_global_norm, make_flat_optimizer,
+                                    sgd)

@@ -1,0 +1,104 @@
+"""Fused outer-Adam Pallas kernel over the packed parameter plane.
+
+Per-leaf XLA Adam is ~10 ops per tensor (two moment EMAs with upcasts,
+bias corrections, rsqrt, the φ update) — each materialized separately.
+On the flat plane the whole step is one pass: every grid step reads one
+(block_rows, 128) tile of (φ, g, m, v), updates the moments, applies
+bias correction and the parameter update, and writes (φ', m', v') back.
+Bias-correction scales depend on the step count, so they are computed
+outside and handed to the kernel as SMEM scalars.
+
+``input_output_aliases`` aliases φ/m/v to the three outputs so the
+update is in-place on TPU (the buffers are donated by the jitted
+meta-step; see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.meta_update.fused import LANE, SUBLANE, choose_block_rows
+
+
+def _adam_kernel(sc_ref, p_ref, g_ref, m_ref, v_ref,
+                 po_ref, mo_ref, vo_ref, *, b1, b2, eps, lr, wd):
+    g = g_ref[...].astype(jnp.float32)
+    p = p_ref[...].astype(jnp.float32)
+    m = b1 * m_ref[...].astype(jnp.float32) + (1.0 - b1) * g
+    v = b2 * v_ref[...].astype(jnp.float32) + (1.0 - b2) * g * g
+    u = (m * sc_ref[0]) / (jnp.sqrt(v * sc_ref[1]) + eps)
+    if wd > 0.0:
+        u = u + wd * p
+    po_ref[...] = (p - lr * u).astype(po_ref.dtype)
+    mo_ref[...] = m.astype(mo_ref.dtype)
+    vo_ref[...] = v.astype(vo_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("lr", "b1", "b2", "eps", "wd", "interpret"))
+def adam_flat_pallas(phi, g, m, v, scales, *, lr, b1, b2, eps, wd,
+                     interpret: bool = False):
+    """One fused Adam step on flat (N,) buffers; scales = (2,) f32 holding
+    the bias-correction factors [1/(1−b1^t), 1/(1−b2^t)]."""
+    (N,) = phi.shape
+    assert N % (SUBLANE * LANE) == 0, N
+    total_rows = N // LANE
+    rows = choose_block_rows(total_rows)
+    n_tiles = total_rows // rows
+
+    spec = pl.BlockSpec((rows, LANE), lambda i: (i, 0))
+    shape2d = (total_rows, LANE)
+    kernel = functools.partial(_adam_kernel, b1=b1, b2=b2, eps=eps, lr=lr,
+                               wd=wd)
+    new_p, new_m, new_v = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
+                  spec, spec, spec, spec],
+        out_specs=[spec, spec, spec],
+        out_shape=[jax.ShapeDtypeStruct(shape2d, phi.dtype),
+                   jax.ShapeDtypeStruct(shape2d, m.dtype),
+                   jax.ShapeDtypeStruct(shape2d, v.dtype)],
+        # φ, m, v update in place (inputs 1/3/4 -> outputs 0/1/2)
+        input_output_aliases={1: 0, 3: 1, 4: 2},
+        interpret=interpret,
+    )(scales.astype(jnp.float32), phi.reshape(shape2d), g.reshape(shape2d),
+      m.reshape(shape2d), v.reshape(shape2d))
+    return new_p.reshape(N), new_m.reshape(N), new_v.reshape(N)
+
+
+def adam_flat_ref(phi, g, m, v, scales, *, lr, b1, b2, eps, wd):
+    """Pure-jnp oracle for the fused kernel (single fused elementwise
+    chain over the flat plane — still far fewer HLO ops than per-leaf)."""
+    g = g.astype(jnp.float32)
+    m = b1 * m.astype(jnp.float32) + (1.0 - b1) * g
+    v = b2 * v.astype(jnp.float32) + (1.0 - b2) * g * g
+    u = (m * scales[0]) / (jnp.sqrt(v * scales[1]) + eps)
+    if wd > 0.0:
+        u = u + wd * phi.astype(jnp.float32)
+    return (phi.astype(jnp.float32) - lr * u).astype(phi.dtype), m, v
+
+
+def adam_flat_update(phi, g, m, v, step, *, lr, b1=0.9, b2=0.999, eps=1e-8,
+                     wd=0.0, state_dtype=jnp.float32, impl: str = "xla"):
+    """One outer-Adam step on the packed plane.
+
+    step: previous step count (int32 scalar); returns
+    (phi', m', v', step+1) with moments in ``state_dtype``.
+    """
+    step = step + 1
+    t = step.astype(jnp.float32)
+    scales = jnp.stack([1.0 / (1.0 - b1 ** t), 1.0 / (1.0 - b2 ** t)])
+    if impl == "xla":
+        phi, m, v = adam_flat_ref(phi, g, m, v, scales, lr=lr, b1=b1, b2=b2,
+                                  eps=eps, wd=wd)
+    else:
+        phi, m, v = adam_flat_pallas(
+            phi, g, m, v, scales, lr=lr, b1=b1, b2=b2, eps=eps, wd=wd,
+            interpret=(impl == "pallas_interpret"))
+    return phi, m.astype(state_dtype), v.astype(state_dtype), step

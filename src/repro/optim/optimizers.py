@@ -24,6 +24,10 @@ class Optimizer:
     init: Callable[[Any], Any]
     update: Callable[[Any, Any, Any], tuple]
     name: str = "optimizer"
+    # hyperparameter record ({"kind": ..., ...}) so wrappers like the
+    # packed-plane fused Adam can rebuild the update without re-deriving
+    # closure state; None for custom optimizers.
+    hyper: Any = None
 
 
 def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
@@ -43,7 +47,8 @@ def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
         new_params = jax.tree.map(lambda p, m: p - lr * m.astype(p.dtype), params, mu)
         return new_params, {"step": state["step"] + 1, "mu": mu}
 
-    return Optimizer(init, update, name=f"sgd(lr={lr},mom={momentum})")
+    return Optimizer(init, update, name=f"sgd(lr={lr},mom={momentum})",
+                     hyper={"kind": "sgd", "lr": lr, "momentum": momentum})
 
 
 def adam(
@@ -89,11 +94,46 @@ def adam(
         new_params = jax.tree.map(upd, params, m, v)
         return new_params, {"step": step, "m": m, "v": v}
 
-    return Optimizer(init, update, name=f"adam(lr={lr})")
+    return Optimizer(init, update, name=f"adam(lr={lr})",
+                     hyper={"kind": "adam", "lr": lr, "b1": b1, "b2": b2,
+                            "eps": eps, "weight_decay": weight_decay,
+                            "state_dtype": state_dtype})
 
 
 def adamw(lr: float, weight_decay: float = 0.01, **kw) -> Optimizer:
     return adam(lr, weight_decay=weight_decay, **kw)
+
+
+def make_flat_optimizer(opt: Optimizer, *, impl: str = "xla") -> Optimizer:
+    """Lift ``opt`` onto the packed parameter plane (flat (N,) params).
+
+    Adam gets the single-pass fused update (``optim/fused_adam.py``) —
+    one kernel / one fused elementwise chain instead of ~10 XLA ops per
+    leaf. Any other optimizer falls back to itself: a flat buffer is a
+    valid single-leaf pytree, so tree_map-based updates already work.
+    """
+    hyp = opt.hyper
+    if not (isinstance(hyp, dict) and hyp.get("kind") == "adam"):
+        return opt
+
+    from repro.optim.fused_adam import adam_flat_update
+
+    state_dtype = hyp["state_dtype"]
+
+    def init(flat_phi):
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jnp.zeros_like(flat_phi, dtype=state_dtype),
+                "v": jnp.zeros_like(flat_phi, dtype=state_dtype)}
+
+    def update(flat_phi, flat_g, state):
+        phi, m, v, step = adam_flat_update(
+            flat_phi, flat_g, state["m"], state["v"], state["step"],
+            lr=hyp["lr"], b1=hyp["b1"], b2=hyp["b2"], eps=hyp["eps"],
+            wd=hyp["weight_decay"], state_dtype=state_dtype, impl=impl)
+        return phi, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update, name=f"flat_{opt.name}[{impl}]",
+                     hyper=hyp)
 
 
 def clip_by_global_norm(grads, max_norm: float):

@@ -9,3 +9,4 @@ from repro.utils.pytree import (
     tree_cast,
     tree_any_nan,
 )
+from repro.utils.flat import ALIGN, FlatPlane, plane_for

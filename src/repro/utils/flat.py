@@ -1,0 +1,107 @@
+"""The packed parameter plane: φ as one padded, lane-aligned flat buffer.
+
+Every per-round server op (client-gradient aggregation, outer Adam, the
+fused inner update) is pure memory traffic over the full parameter set.
+Executing those ops per-leaf costs one XLA op pair per tensor and forces
+re-flattening on every call; the plane instead computes the layout
+*once* — treedef, per-leaf offsets, padded size — and keeps the whole
+meta-step on a single ``(n_padded,)`` float32 buffer (see DESIGN.md §2
+for the layout and dtype policy).
+
+Alignment: ``n_padded`` is a multiple of ``ALIGN = 8 * 128`` elements so
+any slice of the plane reshapes to whole (sublane, lane) = (8, 128) TPU
+tiles, which is what the Pallas kernels in ``kernels/meta_update`` and
+``optim/fused_adam`` require.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ALIGN = 8 * 128          # one (sublane, lane) f32 tile
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSlot:
+    """Where one pytree leaf lives inside the plane."""
+    offset: int
+    size: int
+    shape: tuple
+    dtype: str
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatPlane:
+    """Cached flattening spec for one pytree structure.
+
+    Hashable and shape-only, so it can be closed over by jitted
+    functions without retriggering tracing; ``pack``/``unpack`` are the
+    only data-touching methods.
+    """
+    treedef: Any
+    slots: tuple          # tuple[LeafSlot, ...] in treedef leaf order
+    n_real: int
+    n_padded: int
+
+    @classmethod
+    def from_tree(cls, tree, align: int = ALIGN) -> "FlatPlane":
+        leaves, treedef = jax.tree.flatten(tree)
+        slots, off = [], 0
+        for x in leaves:
+            size = int(np.prod(x.shape)) if x.shape else 1
+            slots.append(LeafSlot(off, size, tuple(x.shape),
+                                  jnp.dtype(x.dtype).name))
+            off += size
+        n_padded = off + ((-off) % align)
+        return cls(treedef, tuple(slots), off, max(n_padded, align))
+
+    # ---- data movement --------------------------------------------------
+    def pack(self, tree, dtype=jnp.float32):
+        """tree -> (n_padded,) plane (zero pad tail).
+
+        dtype defaults to the plane's float32 policy; a reduced-precision
+        block (e.g. bfloat16 for the (m, N) client-gradient block) halves
+        the aggregation traffic — the fused kernels still accumulate in
+        f32 (DESIGN.md §2)."""
+        leaves = jax.tree.leaves(tree)
+        assert len(leaves) == len(self.slots), \
+            f"tree has {len(leaves)} leaves, plane expects {len(self.slots)}"
+        flat = jnp.concatenate(
+            [x.reshape(-1).astype(dtype) for x in leaves])
+        pad = self.n_padded - self.n_real
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        return flat
+
+    def unpack(self, flat):
+        """(n_padded,) plane -> tree with original shapes/dtypes."""
+        out = [flat[s.offset:s.offset + s.size].reshape(s.shape)
+               .astype(s.dtype) for s in self.slots]
+        return jax.tree.unflatten(self.treedef, out)
+
+    def pack_batch(self, tree, dtype=jnp.float32):
+        """tree with leading batch axis on every leaf -> (B, n_padded)."""
+        return jax.vmap(lambda t: self.pack(t, dtype))(tree)
+
+    def zeros(self):
+        return jnp.zeros((self.n_padded,), jnp.float32)
+
+
+# ---- spec cache ---------------------------------------------------------
+_PLANE_CACHE: dict = {}
+
+
+def plane_for(tree, align: int = ALIGN) -> FlatPlane:
+    """FlatPlane for ``tree``'s structure, memoized by (treedef, shapes,
+    dtypes) so hot paths never recompute offsets."""
+    key = (jax.tree.structure(tree),
+           tuple((tuple(x.shape), jnp.dtype(x.dtype).name)
+                 for x in jax.tree.leaves(tree)), align)
+    plane = _PLANE_CACHE.get(key)
+    if plane is None:
+        plane = _PLANE_CACHE[key] = FlatPlane.from_tree(tree, align)
+    return plane

@@ -3,6 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dep; see test_meta_step_paths
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.meta_update.ops import meta_update

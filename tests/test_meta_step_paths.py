@@ -1,0 +1,201 @@
+"""Execution-path equivalence for the meta step.
+
+vmap / scan / chunked client axes (incl. non-divisor chunk sizes) and
+the packed parameter plane (xla and pallas_interpret kernels) must all
+produce the same φ and the same weighted metrics after a round. Also
+covers the fused outer-Adam and weighted-aggregation kernels against
+their jnp oracles, and FlatPlane pack/unpack round-tripping. None of
+this needs the optional `hypothesis` dependency, so kernel equivalence
+stays covered even when test_kernels_meta_update is skipped.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_algorithm
+from repro.core.fedmeta import (federated_meta_step, init_packed_state,
+                                make_packed_meta_train_step)
+from repro.kernels.meta_update.aggregate import (weighted_aggregate_flat,
+                                                 weighted_aggregate_ref)
+from repro.optim import adam, sgd
+from repro.optim.fused_adam import adam_flat_update
+from repro.utils.flat import ALIGN, FlatPlane, plane_for
+
+
+def quad_loss(params, batch):
+    return 0.5 * jnp.sum(jnp.square(params["w"] - batch))
+
+
+def quad_eval(params, batch):
+    return quad_loss(params, batch), {"accuracy": jnp.zeros(())}
+
+
+@pytest.fixture
+def round_setup(rng):
+    m = 5
+    theta = {"w": jnp.asarray(rng.normal(0, 1, (7,)), jnp.float32)}
+    sup = jnp.asarray(rng.normal(0, 1, (m, 7)), jnp.float32)
+    qry = jnp.asarray(rng.normal(0, 1, (m, 7)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.5, 3.0, (m,)), jnp.float32)
+    algo = make_algorithm("meta-sgd", quad_loss, quad_eval, inner_lr=0.1)
+    phi = algo.init_state(jax.random.PRNGKey(0), lambda k: theta)
+    return algo, phi, sup, qry, w
+
+
+# chunk sizes: divisor, non-divisor, and chunk > m (single padded chunk)
+@pytest.mark.parametrize("axis,chunk", [
+    ("scan", None), ("chunked", 1), ("chunked", 2), ("chunked", 3),
+    ("chunked", 5), ("chunked", 8),
+])
+def test_client_axis_equivalence(round_setup, axis, chunk):
+    algo, phi, sup, qry, w = round_setup
+    opt = adam(1e-2)
+    ref_phi, _, ref_met = federated_meta_step(
+        algo, opt, phi, opt.init(phi), sup, qry, w, client_axis="vmap")
+    out_phi, _, out_met = federated_meta_step(
+        algo, opt, phi, opt.init(phi), sup, qry, w, client_axis=axis,
+        client_chunk=chunk)
+    for k in ("theta", "alpha"):
+        np.testing.assert_allclose(np.asarray(out_phi[k]["w"]),
+                                   np.asarray(ref_phi[k]["w"]),
+                                   rtol=1e-5, atol=1e-6)
+    # every path reports the same weighted metrics (scan used to take an
+    # unweighted mean)
+    np.testing.assert_allclose(float(out_met["query_loss"]),
+                               float(ref_met["query_loss"]), rtol=1e-5)
+
+
+@pytest.mark.parametrize("axis,chunk", [
+    ("vmap", None), ("scan", None), ("chunked", 2), ("chunked", 3),
+])
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+def test_packed_plane_matches_tree(round_setup, axis, chunk, impl):
+    algo, phi, sup, qry, w = round_setup
+    opt = adam(1e-2)
+    ref_phi, _, ref_met = federated_meta_step(
+        algo, opt, phi, opt.init(phi), sup, qry, w, client_axis="vmap")
+    plane = plane_for(phi)
+    step = make_packed_meta_train_step(
+        algo, opt, plane, client_axis=axis, client_chunk=chunk, impl=impl)
+    state, met = step(init_packed_state(opt, plane, phi), sup, qry, w)
+    out_phi = plane.unpack(state["phi"])
+    for k in ("theta", "alpha"):
+        np.testing.assert_allclose(np.asarray(out_phi[k]["w"]),
+                                   np.asarray(ref_phi[k]["w"]),
+                                   rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(met["query_loss"]),
+                               float(ref_met["query_loss"]), rtol=1e-5)
+
+
+def test_packed_bf16_block_close_to_f32(round_setup):
+    """The reduced-precision gradient block tracks the exact pipeline to
+    bf16 tolerance (f32 accumulation in the aggregation)."""
+    algo, phi, sup, qry, w = round_setup
+    opt = adam(1e-2)
+    ref_phi, _, _ = federated_meta_step(
+        algo, opt, phi, opt.init(phi), sup, qry, w, client_axis="vmap")
+    plane = plane_for(phi)
+    step = make_packed_meta_train_step(algo, opt, plane,
+                                       block_dtype=jnp.bfloat16)
+    state, _ = step(init_packed_state(opt, plane, phi), sup, qry, w)
+    out_phi = plane.unpack(state["phi"])
+    np.testing.assert_allclose(np.asarray(out_phi["theta"]["w"]),
+                               np.asarray(ref_phi["theta"]["w"]),
+                               rtol=5e-2, atol=5e-3)
+
+
+def test_packed_plane_non_adam_falls_back(round_setup):
+    """Non-Adam outer optimizers run on the plane via the generic path."""
+    algo, phi, sup, qry, w = round_setup
+    opt = sgd(0.5, momentum=0.9)
+    ref_phi, _, _ = federated_meta_step(
+        algo, opt, phi, opt.init(phi), sup, qry, w, client_axis="vmap")
+    plane = plane_for(phi)
+    step = make_packed_meta_train_step(algo, opt, plane)
+    state, _ = step(init_packed_state(opt, plane, phi), sup, qry, w)
+    out_phi = plane.unpack(state["phi"])
+    np.testing.assert_allclose(np.asarray(out_phi["theta"]["w"]),
+                               np.asarray(ref_phi["theta"]["w"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("wd", [0.0, 0.01])
+def test_fused_adam_kernel_matches_xla(rng, wd):
+    N = 2 * ALIGN
+    phi = jnp.asarray(rng.normal(0, 1, (N,)), jnp.float32)
+    g = jnp.asarray(rng.normal(0, 1, (N,)), jnp.float32)
+    m = jnp.asarray(rng.normal(0, 0.1, (N,)), jnp.float32)
+    v = jnp.asarray(np.abs(rng.normal(0, 0.1, (N,))), jnp.float32)
+    step = jnp.asarray(3, jnp.int32)
+    ref = adam_flat_update(phi, g, m, v, step, lr=1e-3, wd=wd, impl="xla")
+    out = adam_flat_update(phi, g, m, v, step, lr=1e-3, wd=wd,
+                           impl="pallas_interpret")
+    for r, o, name in zip(ref, out, ("phi", "m", "v", "step")):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                                   rtol=1e-6, atol=1e-7, err_msg=name)
+
+
+def test_fused_adam_multi_step_bias_correction(rng):
+    """Several fused steps track the per-leaf tree Adam exactly."""
+    N = ALIGN
+    tree = {"a": jnp.asarray(rng.normal(0, 1, (300,)), jnp.float32),
+            "b": jnp.asarray(rng.normal(0, 1, (20, 30)), jnp.float32)}
+    plane = plane_for(tree)
+    assert plane.n_padded == N
+    opt = adam(3e-3)
+    tree_state = opt.init(tree)
+    flat = plane.pack(tree)
+    m = v = jnp.zeros((N,), jnp.float32)
+    step = jnp.zeros((), jnp.int32)
+    for t in range(4):
+        g_tree = jax.tree.map(
+            lambda x: jnp.asarray(np.random.RandomState(t).normal(
+                0, 1, x.shape), jnp.float32), tree)
+        tree_out, tree_state = opt.update(tree_out if t else tree,
+                                          g_tree, tree_state)
+        flat, m, v, step = adam_flat_update(
+            flat, plane.pack(g_tree), m, v, step, lr=3e-3, impl="xla")
+    unpacked = plane.unpack(flat)
+    for k in tree:
+        np.testing.assert_allclose(np.asarray(unpacked[k]),
+                                   np.asarray(tree_out[k]),
+                                   rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("m", [1, 3, 16])
+def test_weighted_aggregation_kernel_matches_ref(rng, m):
+    N = 2 * ALIGN
+    gs = jnp.asarray(rng.normal(0, 1, (m, N)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0, 1, (m,)), jnp.float32)
+    ref = weighted_aggregate_ref(gs, w)
+    out = weighted_aggregate_flat(gs, w, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_flat_plane_roundtrip(rng):
+    tree = {"w": jnp.asarray(rng.normal(0, 1, (13, 7)), jnp.float32),
+            "b": jnp.asarray(rng.normal(0, 1, (11,)), jnp.bfloat16),
+            "s": jnp.asarray(1.5, jnp.float32)}
+    plane = FlatPlane.from_tree(tree)
+    assert plane.n_padded % ALIGN == 0
+    out = plane.unpack(plane.pack(tree))
+    for k in tree:
+        assert out[k].dtype == tree[k].dtype
+        assert out[k].shape == tree[k].shape
+        np.testing.assert_allclose(
+            np.asarray(out[k], np.float32), np.asarray(tree[k], np.float32),
+            rtol=1e-2 if tree[k].dtype == jnp.bfloat16 else 1e-7)
+    # batch pack
+    batch = jax.tree.map(lambda x: jnp.stack([x, x + 1]), tree)
+    packed = plane.pack_batch(batch)
+    assert packed.shape == (2, plane.n_padded)
+    np.testing.assert_allclose(np.asarray(packed[0]),
+                               np.asarray(plane.pack(tree)), rtol=1e-6)
+
+
+def test_plane_for_is_cached(rng):
+    t1 = {"w": jnp.zeros((4, 4), jnp.float32)}
+    t2 = {"w": jnp.ones((4, 4), jnp.float32)}
+    assert plane_for(t1) is plane_for(t2)

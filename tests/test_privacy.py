@@ -3,6 +3,9 @@ DP clip/noise behavior (beyond-paper; paper §5 future work)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep
 from hypothesis import given, settings, strategies as st
 
 from repro.federated.privacy import (clip_gradient, dp_aggregate,
