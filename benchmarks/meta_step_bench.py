@@ -31,7 +31,7 @@ which is accurate — for the chunked-memory claim.
 Usage:
   PYTHONPATH=src python benchmarks/meta_step_bench.py            # full
   PYTHONPATH=src python benchmarks/meta_step_bench.py --dry-run  # CI smoke
-Emits BENCH_meta_step.json (see --out).
+Emits results/bench/BENCH_meta_step.json (see --out).
 """
 from __future__ import annotations
 
@@ -52,7 +52,9 @@ SCALES = {
 }
 
 
-def _build_task(scale_cfg, m, batch, seed=0):
+def _build_task(scale_cfg, m, batch, seed=0, algo_name="fomaml",
+                inner_steps=1):
+    """Deep-narrow MLP meta-learning task (shared with round_bench)."""
     import jax
     import jax.numpy as jnp
 
@@ -85,7 +87,8 @@ def _build_task(scale_cfg, m, batch, seed=0):
     def eval_fn(params, data):
         return loss_fn(params, data), {"accuracy": jnp.zeros(())}
 
-    algo = make_algorithm("fomaml", loss_fn, eval_fn, inner_lr=0.05)
+    algo = make_algorithm(algo_name, loss_fn, eval_fn, inner_lr=0.05,
+                          inner_steps=inner_steps)
     sup = (jnp.asarray(rng.normal(0, 1, (m, batch, D)), jnp.float32),
            jnp.asarray(rng.normal(0, 1, (m, batch, D)), jnp.float32))
     qry = (jnp.asarray(rng.normal(0, 1, (m, batch, D)), jnp.float32),
@@ -137,7 +140,7 @@ def _time_interleaved(configs, reps):
 
 
 def run(*, dry: bool = False, interpret: bool = False, reps: int = 10,
-        json_out: str = "BENCH_meta_step.json"):
+        json_out: str = "results/bench/BENCH_meta_step.json"):
     import jax
 
     from repro.core.fedmeta import (init_packed_state, make_meta_train_step,
@@ -316,8 +319,16 @@ def main():
     ap.add_argument("--interpret", action="store_true",
                     help="also run packed pallas_interpret (slow)")
     ap.add_argument("--reps", type=int, default=10)
-    ap.add_argument("--out", default="BENCH_meta_step.json")
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default: the committed artifact "
+                         "for full runs, a _smoke variant for --dry-run "
+                         "so a doc-following smoke cannot clobber the "
+                         "full-run numbers)")
     args = ap.parse_args()
+    if args.out is None:
+        args.out = ("results/bench/BENCH_meta_step_smoke.json"
+                    if args.dry_run
+                    else "results/bench/BENCH_meta_step.json")
     run(dry=args.dry_run, interpret=args.interpret, reps=args.reps,
         json_out=args.out)
 

@@ -1,0 +1,233 @@
+"""End-to-end round benchmark: tree vs packed vs packed+client-plane.
+
+The meta-step bench (``meta_step_bench.py``) timed the *server* half of
+the pipeline introduced in PR 1; this bench times the unit the paper
+actually iterates — one full FedMeta round (m clients' ModelTraining
+inner loop + aggregation + outer Adam) — across
+
+  pipeline:    "tree"         — per-leaf everything (seed path)
+               "packed"       — PR 1: flat server half (fused (m, N)
+                                aggregation + single-pass flat Adam),
+                                tree client inner loop
+               "packed_plane" — this PR: the client inner loop also runs
+                                on flat memory — chunks of clients adapt
+                                in lockstep on a (C, N) plane with the
+                                fused inner-update kernel, per-client
+                                meta-gradients come out flat
+  client_axis: "vmap", "scan", "chunked@k", "sharded" (shard_map over a
+               mesh built from every visible device; 1 device on a plain
+               CPU host — pass --devices N, matched to the physical core
+               count, to see real client parallelism)
+  scale:       two model scales; "large" is a deep narrow stack (the
+               many-leaf regime where per-leaf dispatch dominates and
+               the flat plane pays off most)
+
+recording interleaved-min wall time plus XLA cost/memory analysis per
+row (same caveat as the meta-step bench: scan bodies are counted once).
+
+The headline summary number is
+``round_speedup_client_plane_vs_packed`` — this PR's full client plane
+(fused inner loop + shardable client axis) vs the PR 1 packed pipeline
+as it shipped (client axis pinned to one device), best configuration
+each, at the larger scale, measured at round granularity. Same-axis
+ratios are also recorded for transparency. The second-order algorithms
+(maml/meta-sgd order 2) are correct through the client plane but pay a
+flat↔tree conversion penalty in reverse-over-reverse mode on CPU — use
+them with client_plane=False there (no automatic fallback); see
+DESIGN.md §9.
+
+Usage:
+  PYTHONPATH=src python benchmarks/round_bench.py            # full
+  PYTHONPATH=src python benchmarks/round_bench.py --dry-run  # CI smoke
+Emits results/bench/BENCH_round.json (see --out).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from benchmarks.meta_step_bench import _analyze, _build_task, \
+    _time_interleaved
+
+# deep narrow stacks: many leaves, modest per-leaf FLOPs — the regime
+# where the inner loop is dispatch-bound and the client plane collapses
+# per-client per-leaf op soup into one fused pass per inner step
+SCALES = {
+    "small": dict(layers=8, width=32, in_dim=16),
+    "large": dict(layers=48, width=32, in_dim=16),
+    "tiny": dict(layers=3, width=16, in_dim=8),       # --dry-run only
+}
+INNER_STEPS = 3
+CLIENTS = 16
+
+
+def run(*, dry: bool = False, reps: int = 10, algo_name: str = "fomaml",
+        json_out: str = "results/bench/BENCH_round.json"):
+    import jax
+
+    from repro.core.fedmeta import (init_packed_state, make_meta_train_step,
+                                    make_packed_meta_train_step)
+    from repro.optim import adam
+    from repro.utils.flat import plane_for
+    from repro.utils.pytree import tree_size
+
+    scales = ["tiny"] if dry else ["small", "large"]
+    m = 4 if dry else CLIENTS
+    batch = 8
+    reps = 1 if dry else reps
+    axes = [("vmap", None), ("sharded", None)] if dry else \
+        [("vmap", None), ("scan", None), ("chunked", 4), ("sharded", None)]
+
+    n_dev = jax.device_count()
+    mesh = jax.make_mesh((n_dev,), ("clients",))
+
+    rows = []
+    for scale in scales:
+        algo, model_init, sup, qry, weights = _build_task(
+            SCALES[scale], m, batch, algo_name=algo_name,
+            inner_steps=INNER_STEPS)
+        opt = adam(1e-3)
+        phi = algo.init_state(jax.random.PRNGKey(0), model_init)
+        plane = plane_for(phi)
+        n_params = tree_size(phi)
+
+        configs = []
+        for pipeline in ("tree", "packed", "packed_plane"):
+            for axis, chunk in axes:
+                if pipeline == "tree":
+                    step = make_meta_train_step(
+                        algo, opt, client_axis=axis, client_chunk=chunk,
+                        mesh=mesh, donate=False)
+                    state = {"phi": phi, "opt": opt.init(phi)}
+                else:
+                    step = make_packed_meta_train_step(
+                        algo, opt, plane, client_axis=axis,
+                        client_chunk=chunk, impl="xla",
+                        client_plane=(pipeline == "packed_plane"),
+                        mesh=mesh, donate=False)
+                    state = init_packed_state(opt, plane, phi)
+                configs.append({
+                    "step": step, "state": state,
+                    "args": (sup, qry, weights),
+                    "row": {"scale": scale, "pipeline": pipeline,
+                            "client_axis": axis, "client_chunk": chunk,
+                            "clients": m, "inner_steps": INNER_STEPS,
+                            "algo": algo.name, "devices": n_dev,
+                            "n_params": int(n_params),
+                            "n_padded": int(plane.n_padded)},
+                })
+        walls = _time_interleaved(configs, reps)
+        for c in configs:
+            analysis, _ = _analyze(c["step"], c["state"], *c["args"])
+            wall_us, wall_med = walls[id(c)]
+            row = {**c["row"], "wall_us_per_round": wall_us,
+                   "wall_us_median": wall_med, **analysis}
+            rows.append(row)
+            chunk_tag = (f"@{row['client_chunk']}"
+                         if row["client_chunk"] else "")
+            print(f"round.{scale}.{row['pipeline']}."
+                  f"{row['client_axis']}{chunk_tag},{wall_us:.0f},"
+                  f"temp={analysis['temp_bytes']}", flush=True)
+
+    report = {
+        "bench": "round",
+        "backend": jax.default_backend(),
+        "devices": n_dev,
+        "dry_run": dry,
+        "reps": reps,
+        "rows": rows,
+        "summary": _summarize(rows),
+    }
+    with open(json_out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {json_out}", flush=True)
+    return report
+
+
+def _summarize(rows):
+    out = {}
+    scales = {r["scale"] for r in rows}
+    big = "large" if "large" in scales else sorted(scales)[-1]
+    out["largest_scale"] = big
+
+    def pick(pipeline, axis):
+        for r in rows:
+            if (r["scale"] == big and r["pipeline"] == pipeline
+                    and r["client_axis"] == axis):
+                return r
+        return None
+
+    def best(pipeline, axes):
+        cand = [pick(pipeline, a) for a in axes]
+        cand = [r for r in cand if r]
+        return min(cand, key=lambda r: r["wall_us_per_round"]) \
+            if cand else None
+
+    # headline: this PR's full client plane (fused inner loop + the
+    # shardable client axis) vs the PR 1 packed pipeline as it shipped
+    # (client axis pinned to one device: vmap/scan/chunked only), best
+    # configuration each, at the larger scale — round granularity
+    pr1 = best("packed", ("vmap", "scan", "chunked"))
+    plane = best("packed_plane", ("vmap", "scan", "chunked", "sharded"))
+    if pr1 and plane:
+        out["round_speedup_client_plane_vs_packed"] = (
+            pr1["wall_us_per_round"] / plane["wall_us_per_round"])
+        out["headline"] = {
+            "pr1_packed_best": f"{pr1['pipeline']}/{pr1['client_axis']}",
+            "client_plane_best":
+                f"{plane['pipeline']}/{plane['client_axis']}",
+            "wall_us_pr1": pr1["wall_us_per_round"],
+            "wall_us_client_plane": plane["wall_us_per_round"],
+        }
+
+    # transparency: same-axis ratios, including the sharded axis applied
+    # to the PR 1 pipeline (the sharded axis alone, without the fused
+    # inner loop, is also new in this PR)
+    for axis in ("vmap", "scan", "chunked", "sharded"):
+        pk, pl_ = pick("packed", axis), pick("packed_plane", axis)
+        if pk and pl_:
+            out[f"round_speedup_client_plane_vs_packed_{axis}"] = (
+                pk["wall_us_per_round"] / pl_["wall_us_per_round"])
+
+    # and vs the seed default (tree/vmap), for the trajectory
+    tree_v = pick("tree", "vmap")
+    if tree_v and plane:
+        out["round_speedup_client_plane_vs_tree_vmap"] = (
+            tree_v["wall_us_per_round"] / plane["wall_us_per_round"])
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny scale, 1 rep — CI smoke")
+    ap.add_argument("--reps", type=int, default=10)
+    ap.add_argument("--algo", default="fomaml")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host CPU devices (sets XLA_FLAGS; must "
+                         "run before jax is imported — match the "
+                         "physical core count for a fair sharded row)")
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default: the committed artifact "
+                         "for full runs, a _smoke variant for --dry-run "
+                         "so a doc-following smoke cannot clobber the "
+                         "full-run numbers)")
+    args = ap.parse_args()
+    if args.out is None:
+        args.out = ("results/bench/BENCH_round_smoke.json" if args.dry_run
+                    else "results/bench/BENCH_round.json")
+    if args.devices:
+        import os
+        import sys
+        if "jax" in sys.modules:
+            raise RuntimeError("--devices must be set before jax import; "
+                               "run round_bench.py standalone")
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}")
+    run(dry=args.dry_run, reps=args.reps, algo_name=args.algo,
+        json_out=args.out)
+
+
+if __name__ == "__main__":
+    main()

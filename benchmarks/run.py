@@ -6,7 +6,10 @@ per-table result lines emitted by each module.
   (default) reduced rounds so the suite finishes on 1 CPU core
   --full   paper-scale rounds (hours on CPU)
   --only   comma-separated subset:
-           kernels,meta_step,table2,fig3,table3,fairness
+           kernels,meta_step,round,table2,fig3,table3,fairness
+
+All artifacts go under --outdir (default results/bench/) — nothing is
+written at the repo root.
 """
 from __future__ import annotations
 
@@ -69,7 +72,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only",
-                    default="kernels,meta_step,table2,fig3,table3,fairness")
+                    default="kernels,meta_step,round,table2,fig3,table3,"
+                            "fairness")
     ap.add_argument("--rounds", type=int, default=0)
     ap.add_argument("--outdir", default="results/bench")
     args = ap.parse_args()
@@ -85,14 +89,28 @@ def main() -> None:
     if "meta_step" in only:
         from benchmarks import meta_step_bench
         t0 = time.time()
-        # only --full refreshes the repo-root perf-trajectory artifact;
-        # the reduced run must not clobber it with dry-scale numbers
-        out = ("BENCH_meta_step.json" if args.full
-               else os.path.join(args.outdir, "BENCH_meta_step.json"))
+        # the committed perf-trajectory artifact lives in outdir; a
+        # reduced run writes a _smoke variant so it cannot clobber the
+        # full-run numbers
+        out = os.path.join(args.outdir,
+                           "BENCH_meta_step.json" if args.full
+                           else "BENCH_meta_step_smoke.json")
         report = meta_step_bench.run(dry=not args.full, json_out=out)
         spd = report["summary"].get("wall_speedup_packed_vs_tree_vmap")
         print(f"meta_step,{(time.time()-t0)*1e6:.0f},"
               f"packed_speedup={f'{spd:.2f}x' if spd else 'n/a'}", flush=True)
+
+    if "round" in only:
+        from benchmarks import round_bench
+        t0 = time.time()
+        out = os.path.join(args.outdir,
+                           "BENCH_round.json" if args.full
+                           else "BENCH_round_smoke.json")
+        report = round_bench.run(dry=not args.full, json_out=out)
+        spd = report["summary"].get("round_speedup_client_plane_vs_packed")
+        print(f"round,{(time.time()-t0)*1e6:.0f},"
+              f"client_plane_speedup={f'{spd:.2f}x' if spd else 'n/a'}",
+              flush=True)
 
     if "table2" in only:
         from benchmarks import table2_leaf

@@ -7,7 +7,7 @@ One meta-training round:
   3. the server updates φ with the (weighted) average of the g_u via the
      outer optimizer (Adam here, per paper A.2).
 
-Three client execution strategies (memory/throughput tradeoff in
+Four client execution strategies (memory/throughput tradeoff in
 DESIGN.md §4):
   - "vmap": all clients in parallel (paper's `for u in parallel`; right
     choice for small models / CPU simulation),
@@ -17,6 +17,11 @@ DESIGN.md §4):
     with the chunk size, not clients-per-round, while keeping vmap
     throughput inside each chunk. m need not divide the chunk size;
     the tail chunk is padded with zero-weight duplicate clients.
+  - "sharded": clients split across the devices of a mesh (shard_map);
+    each device reduces its local clients' gradients to a partial
+    meta-gradient which is psum-reduced into the aggregate — the client
+    half of the round scales with the mesh, and only (N,)-sized partials
+    cross the interconnect (DESIGN.md §10).
 
 Two parameter representations:
   - tree (default): φ stays a pytree; aggregation and the outer step run
@@ -25,15 +30,21 @@ Two parameter representations:
     128-lane-aligned f32 buffer (utils/flat.py); client gradients are
     packed to an (m, N) block, reduced by the fused aggregation kernel,
     and φ is advanced by the fused outer-Adam kernel — the whole server
-    side of the round is two passes over flat memory.
+    side of the round is two passes over flat memory. With
+    ``client_plane=True`` the *client* half runs on flat memory too:
+    chunks of clients adapt in lockstep on a (C, N) plane with the
+    fused inner-update kernel (DESIGN.md §9).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.kernels.meta_update import ops as mu_ops
-from repro.utils.flat import FlatPlane
+from repro.sharding.context import get_mesh
+from repro.utils.flat import FlatPlane, plane_for
 from repro.utils.pytree import tree_add, tree_scale, tree_zeros_like
 
 
@@ -44,22 +55,44 @@ def _normalize_weights(weights, m):
     return weights / jnp.sum(weights)
 
 
-def _chunk_client_axis(support, query, w, m, chunk):
-    """Reshape the leading client axis m -> (n_chunks, chunk), padding the
-    tail with zero-weight copies of client 0 when chunk ∤ m."""
-    pad = (-m) % chunk
+def _pad_client_axis(support, query, w, m, multiple):
+    """Pad the leading client axis to a multiple of ``multiple`` with
+    zero-weight copies of client 0 (w is already normalized, so the
+    padding contributes exactly nothing to gradients or metrics)."""
+    pad = (-m) % multiple
     if pad:
         idx = jnp.concatenate(
             [jnp.arange(m), jnp.zeros((pad,), jnp.int32)])
         support, query = jax.tree.map(lambda x: x[idx], (support, query))
         w = jnp.concatenate([w, jnp.zeros((pad,), w.dtype)])
-    n_chunks = (m + pad) // chunk
+    return support, query, w, m + pad
+
+
+def _chunk_client_axis(support, query, w, m, chunk):
+    """Reshape the leading client axis m -> (n_chunks, chunk), padding the
+    tail with zero-weight copies of client 0 when chunk ∤ m."""
+    support, query, w, m_pad = _pad_client_axis(support, query, w, m, chunk)
+    n_chunks = m_pad // chunk
 
     def split(x):
         return x.reshape((n_chunks, chunk) + x.shape[1:])
 
     support, query = jax.tree.map(split, (support, query))
     return support, query, w.reshape(n_chunks, chunk)
+
+
+def _resolve_mesh(mesh, mesh_axis):
+    """The mesh + axis name clients shard over.
+
+    Precedence: explicit ``mesh=`` > the ambient mesh
+    (sharding/context.py, set by the launcher) > a 1-axis "clients"
+    mesh over every visible device — so ``client_axis="sharded"`` works
+    out of the box on a plain host while launchers keep full control of
+    device placement."""
+    mesh = mesh or get_mesh()
+    if mesh is None:
+        mesh = jax.make_mesh((jax.device_count(),), ("clients",))
+    return mesh, (mesh_axis or mesh.axis_names[0])
 
 
 def _weighted_metrics(w, mets):
@@ -70,21 +103,78 @@ def _weighted_metrics(w, mets):
     return jax.tree.map(lambda x: jnp.sum(w * x), mets)
 
 
+def _scan_chunks(chunk_fn, acc0, add, support, query, w, m, chunk):
+    """Scan-of-chunks reduction shared by the "chunked" axis and the
+    per-device execution of the "sharded" axis.
+
+    chunk_fn(s, q, wc) -> (partial aggregate, per-chunk weighted
+    metrics); ``add`` combines partials into the ``acc0``-shaped carry.
+    Returns (aggregate, metric sums)."""
+    sup_c, qry_c, w_c = _chunk_client_axis(support, query, w, m, chunk)
+
+    def body(acc, inp):
+        partial, mets = chunk_fn(*inp)
+        return add(acc, partial), mets
+
+    acc, msums = jax.lax.scan(body, acc0, (sup_c, qry_c, w_c))
+    return acc, jax.tree.map(jnp.sum, msums)
+
+
+def _sharded_reduce(chunk_fn, acc0, add, support, query, w, m, client_chunk,
+                    mesh, mesh_axis):
+    """shard_map reduction shared by the tree and packed pipelines.
+
+    Clients are padded to a device multiple and split over the mesh
+    axis; each device runs chunk_fn on its local clients (scan of
+    chunks when client_chunk is set) and the partial aggregates and
+    weighted metrics are psum-reduced to replicated outputs. chunk_fn's
+    aggregate may be a flat array or a pytree — psum maps over leaves."""
+    msh, ax = _resolve_mesh(mesh, mesh_axis)
+    sup_p, qry_p, w_p, m_pad = _pad_client_axis(
+        support, query, w, m, msh.shape[ax])
+    m_loc = m_pad // msh.shape[ax]
+
+    def local_fn(s, q, wl):
+        if client_chunk and client_chunk < m_loc:
+            partial, pm = _scan_chunks(
+                chunk_fn, acc0, add, s, q, wl, m_loc, client_chunk)
+        else:
+            partial, pm = chunk_fn(s, q, wl)
+        psum = lambda t: jax.tree.map(      # noqa: E731
+            lambda x: jax.lax.psum(x, ax), t)
+        return psum(partial), psum(pm)
+
+    return shard_map(
+        local_fn, mesh=msh, in_specs=(P(ax), P(ax), P(ax)),
+        out_specs=(P(), P()), check_rep=False)(sup_p, qry_p, w_p)
+
+
 def federated_meta_step(algo, optimizer, phi, opt_state, support, query,
                         weights=None, *, client_axis: str = "vmap",
-                        client_chunk: int | None = None):
+                        client_chunk: int | None = None, mesh=None,
+                        mesh_axis: str | None = None):
     """support/query: pytrees with leading client axis m on each leaf.
     weights: (m,) aggregation weights (paper A.2 weights by local data
-    count); None = uniform 1/m. Returns (phi, opt_state, metrics)."""
+    count); None = uniform 1/m. Returns (phi, opt_state, metrics).
+    mesh/mesh_axis: only for client_axis="sharded" (default: the ambient
+    mesh from sharding.context, its first axis)."""
     m = jax.tree.leaves(support)[0].shape[0]
     w = _normalize_weights(weights, m)
 
-    if client_axis == "vmap":
+    def tree_chunk(s, q, wc):
+        """Weighted per-leaf partial + weighted metrics for one chunk."""
         gs, mets = jax.vmap(
-            lambda s, q: algo.client_grad(phi, s, q))(support, query)
-        meta_g = jax.tree.map(
-            lambda g: jnp.tensordot(w, g.astype(jnp.float32), axes=1), gs)
-        metrics = _weighted_metrics(w, mets)
+            lambda s_, q_: algo.client_grad(phi, s_, q_))(s, q)
+        partial = jax.tree.map(
+            lambda g: jnp.tensordot(wc, g.astype(jnp.float32), axes=1), gs)
+        return partial, _weighted_metrics(wc, mets)
+
+    def tree_acc0():
+        return tree_zeros_like(
+            jax.tree.map(lambda x: x.astype(jnp.float32), phi))
+
+    if client_axis == "vmap":
+        meta_g, metrics = tree_chunk(support, query, w)
     elif client_axis == "scan":
         def body(acc, inp):
             s, q, wi = inp
@@ -93,27 +183,16 @@ def federated_meta_step(algo, optimizer, phi, opt_state, support, query,
                 jax.tree.map(lambda x: x.astype(jnp.float32), g), wi))
             return acc, met
 
-        acc0 = tree_zeros_like(
-            jax.tree.map(lambda x: x.astype(jnp.float32), phi))
-        meta_g, mets = jax.lax.scan(body, acc0, (support, query, w))
+        meta_g, mets = jax.lax.scan(body, tree_acc0(), (support, query, w))
         metrics = _weighted_metrics(w, mets)
     elif client_axis == "chunked":
-        chunk = client_chunk or min(m, 8)
-        sup_c, qry_c, w_c = _chunk_client_axis(support, query, w, m, chunk)
-
-        def body(acc, inp):
-            s, q, wc = inp
-            gs, mets = jax.vmap(
-                lambda s_, q_: algo.client_grad(phi, s_, q_))(s, q)
-            partial = jax.tree.map(
-                lambda g: jnp.tensordot(wc, g.astype(jnp.float32), axes=1),
-                gs)
-            return tree_add(acc, partial), _weighted_metrics(wc, mets)
-
-        acc0 = tree_zeros_like(
-            jax.tree.map(lambda x: x.astype(jnp.float32), phi))
-        meta_g, msums = jax.lax.scan(body, acc0, (sup_c, qry_c, w_c))
-        metrics = jax.tree.map(jnp.sum, msums)
+        meta_g, metrics = _scan_chunks(
+            tree_chunk, tree_acc0(), tree_add, support, query, w, m,
+            client_chunk or min(m, 8))
+    elif client_axis == "sharded":
+        meta_g, metrics = _sharded_reduce(
+            tree_chunk, tree_acc0(), tree_add, support, query, w, m,
+            client_chunk, mesh, mesh_axis)
     else:
         raise ValueError(client_axis)
 
@@ -132,14 +211,16 @@ def _maybe_jit(step, jit: bool, donate: bool):
 
 
 def make_meta_train_step(algo, optimizer, *, client_axis: str = "vmap",
-                         client_chunk: int | None = None, jit: bool = True,
+                         client_chunk: int | None = None, mesh=None,
+                         mesh_axis: str | None = None, jit: bool = True,
                          donate: bool = True):
     """-> step(state, support, query, weights) with state = {phi, opt}."""
 
     def step(state, support, query, weights=None):
         phi, opt_state, metrics = federated_meta_step(
             algo, optimizer, state["phi"], state["opt"], support, query,
-            weights, client_axis=client_axis, client_chunk=client_chunk)
+            weights, client_axis=client_axis, client_chunk=client_chunk,
+            mesh=mesh, mesh_axis=mesh_axis)
         return {"phi": phi, "opt": opt_state}, metrics
 
     return _maybe_jit(step, jit, donate)
@@ -158,19 +239,32 @@ def make_packed_meta_train_step(algo, optimizer, plane: FlatPlane, *,
                                 client_axis: str = "vmap",
                                 client_chunk: int | None = None,
                                 impl: str | None = None,
-                                block_dtype=None, jit: bool = True,
-                                donate: bool = True):
+                                block_dtype=None,
+                                client_plane: bool = False,
+                                mesh=None, mesh_axis: str | None = None,
+                                jit: bool = True, donate: bool = True):
     """Meta-train step over the packed plane: state = {phi: (N,), opt}.
 
     φ is unpacked to a pytree exactly once per round (the client model
     needs structured parameters); everything after the per-client grads —
     aggregation and the outer Adam — stays on flat buffers. ``impl``
-    picks xla / pallas / pallas_interpret for both fused server kernels
-    (None = the ``REPRO_META_UPDATE_IMPL`` default). ``block_dtype``
-    sets the dtype of the packed client-gradient block (None = f32,
-    exact; bfloat16 halves the aggregation traffic and models a
-    half-precision client upload — the fused ops still accumulate in
-    f32; see DESIGN.md §2).
+    picks xla / pallas / pallas_interpret for the fused kernels (None =
+    the ``REPRO_META_UPDATE_IMPL`` default). ``block_dtype`` sets the
+    dtype of the packed client-gradient block (None = f32, exact;
+    bfloat16 halves the aggregation traffic and models a half-precision
+    client upload — the fused ops still accumulate in f32; see
+    DESIGN.md §2).
+
+    ``client_plane=True`` additionally runs the *inner loop* on flat
+    memory: each chunk of clients adapts in lockstep on a (C, N) client
+    plane via the fused inner-update kernel, and per-client
+    meta-gradients come out flat (``algo.client_grad_chunk_packed``) —
+    no per-client pytree pack, the whole round is flat end-to-end
+    except the model forward/backward itself (DESIGN.md §9).
+    ``client_axis="sharded"`` splits clients over the devices of
+    ``mesh`` (default: the ambient mesh); each device reduces its local
+    block with the packed aggregation kernel and the (N,) partials are
+    psum-reduced into the meta-gradient (DESIGN.md §10).
     """
     from repro.optim.optimizers import make_flat_optimizer
     impl = mu_ops.resolve_impl(impl)
@@ -182,37 +276,54 @@ def make_packed_meta_train_step(algo, optimizer, plane: FlatPlane, *,
         m = jax.tree.leaves(support)[0].shape[0]
         w = _normalize_weights(weights, m)
 
-        def one_packed(s, q):
-            g, met = algo.client_grad(phi, s, q)
-            return plane.pack(g, bd), met
+        if client_plane:
+            tplane = plane_for(phi["theta"])
+
+            def chunk_grads(s, q):
+                """(C, N) gradient rows + metrics for a chunk of clients,
+                computed on the flat client plane."""
+                G, mets = algo.client_grad_chunk_packed(
+                    plane, tplane, phi, s, q, impl=impl)
+                return G.astype(bd), mets
+        else:
+            def one_packed(s, q):
+                g, met = algo.client_grad(phi, s, q)
+                return plane.pack(g, bd), met
+
+            def chunk_grads(s, q):
+                return jax.vmap(one_packed)(s, q)
+
+        def packed_chunk(s, q, wc):
+            """Fused (N,) weighted partial + weighted metrics for one
+            chunk of clients."""
+            G, mets = chunk_grads(s, q)
+            return (mu_ops.weighted_aggregate(G, wc, impl=impl),
+                    _weighted_metrics(wc, mets))
 
         if client_axis == "vmap":
-            G, mets = jax.vmap(one_packed)(support, query)
-            meta_g = mu_ops.weighted_aggregate(G, w, impl=impl)
-            metrics = _weighted_metrics(w, mets)
+            meta_g, metrics = packed_chunk(support, query, w)
         elif client_axis == "scan":
             def body(acc, inp):
                 s, q, wi = inp
-                g, met = one_packed(s, q)
+                if client_plane:
+                    G, met = chunk_grads(
+                        *jax.tree.map(lambda x: x[None], (s, q)))
+                    g, met = G[0], jax.tree.map(lambda x: x[0], met)
+                else:
+                    g, met = one_packed(s, q)
                 return acc + wi * g.astype(jnp.float32), met
 
             meta_g, mets = jax.lax.scan(
                 body, plane.zeros(), (support, query, w))
             metrics = _weighted_metrics(w, mets)
         elif client_axis == "chunked":
-            chunk = client_chunk or min(m, 8)
-            sup_c, qry_c, w_c = _chunk_client_axis(
-                support, query, w, m, chunk)
-
-            def body(acc, inp):
-                s, q, wc = inp
-                G, mets = jax.vmap(one_packed)(s, q)
-                partial = mu_ops.weighted_aggregate(G, wc, impl=impl)
-                return acc + partial, _weighted_metrics(wc, mets)
-
-            meta_g, msums = jax.lax.scan(
-                body, plane.zeros(), (sup_c, qry_c, w_c))
-            metrics = jax.tree.map(jnp.sum, msums)
+            meta_g, metrics = _scan_chunks(
+                packed_chunk, plane.zeros(), jnp.add, support, query, w,
+                m, client_chunk or min(m, 8))
+        elif client_axis == "sharded":
+            meta_g, metrics = _sharded_reduce(
+                packed_chunk, plane.zeros(), jnp.add, support, query, w,
+                m, client_chunk, mesh, mesh_axis)
         else:
             raise ValueError(client_axis)
 

@@ -5,15 +5,19 @@ between server and clients and total client FLOPs needed to hit a target
 accuracy. This tracker reproduces that accounting exactly:
 
   per round: download = m * bytes(φ), upload = m * bytes(g_u)
-  (g_u matches φ structurally for every algorithm in Alg. 1)
+  (g_u matches φ structurally for every algorithm in Alg. 1; when the
+  packed pipeline transmits a reduced-precision gradient block —
+  ``block_dtype=bf16`` — the upload leg counts the block's actual dtype,
+  so the reported communication reduction matches what is transmitted)
   client compute = m * flops_per_client (measured once from the compiled
   client function via XLA cost analysis).
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
-from repro.utils.pytree import tree_bytes
+from repro.utils.pytree import tree_bytes, tree_size
 
 
 @dataclasses.dataclass
@@ -22,11 +26,20 @@ class CommTracker:
     clients_per_round: int
     flops_per_client: float = 0.0
     rounds: int = 0
+    # bytes of one client's uploaded gradient; None = same as φ (f32
+    # tree upload). Set by for_state(block_dtype=...) for the packed
+    # reduced-precision block.
+    grad_bytes: Optional[int] = None
 
     @classmethod
     def for_state(cls, phi, clients_per_round: int,
-                  flops_per_client: float = 0.0):
-        return cls(tree_bytes(phi), clients_per_round, flops_per_client)
+                  flops_per_client: float = 0.0, block_dtype=None):
+        grad_bytes = None
+        if block_dtype is not None:
+            import jax.numpy as jnp
+            grad_bytes = tree_size(phi) * jnp.dtype(block_dtype).itemsize
+        return cls(tree_bytes(phi), clients_per_round, flops_per_client,
+                   grad_bytes=grad_bytes)
 
     def tick(self, rounds: int = 1):
         self.rounds += rounds
@@ -37,7 +50,9 @@ class CommTracker:
 
     @property
     def upload_bytes(self) -> int:
-        return self.rounds * self.clients_per_round * self.phi_bytes
+        per_client = (self.grad_bytes if self.grad_bytes is not None
+                      else self.phi_bytes)
+        return self.rounds * self.clients_per_round * per_client
 
     @property
     def total_bytes(self) -> int:

@@ -100,13 +100,19 @@ class FederatedTrainer:
     packed: bool = False                 # packed parameter plane pipeline
     impl: Optional[str] = None           # fused-kernel impl for packed
     block_dtype: Optional[object] = None  # client-grad block dtype (packed)
+    client_plane: bool = False  # fused flat inner loop (packed only)
+    mesh: Optional[object] = None  # for client_axis="sharded" (None =
+    mesh_axis: Optional[str] = None  # ambient mesh, first axis)
 
     def __post_init__(self):
+        if self.client_plane and not self.packed:
+            raise ValueError("client_plane=True requires packed=True")
         # the packed step needs φ's FlatPlane, built in init(); the tree
         # step has no such dependency and is built eagerly
         self._step = None if self.packed else make_meta_train_step(
             self.algo, self.optimizer, client_axis=self.client_axis,
-            client_chunk=self.client_chunk)
+            client_chunk=self.client_chunk, mesh=self.mesh,
+            mesh_axis=self.mesh_axis)
         self._plane = None
         self._rng = np.random.RandomState(self.seed)
         self._evaluator = make_meta_evaluator(self.algo)
@@ -121,11 +127,15 @@ class FederatedTrainer:
                 self.algo, self.optimizer, self._plane,
                 client_axis=self.client_axis,
                 client_chunk=self.client_chunk, impl=self.impl,
-                block_dtype=self.block_dtype)
+                block_dtype=self.block_dtype,
+                client_plane=self.client_plane, mesh=self.mesh,
+                mesh_axis=self.mesh_axis)
             state = init_packed_state(self.optimizer, self._plane, phi)
         else:
             state = {"phi": phi, "opt": self.optimizer.init(phi)}
-        self.comm = CommTracker.for_state(phi, self.clients_per_round)
+        self.comm = CommTracker.for_state(
+            phi, self.clients_per_round,
+            block_dtype=self.block_dtype if self.packed else None)
         return state
 
     def phi_tree(self, state):

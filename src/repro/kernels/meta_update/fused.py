@@ -1,15 +1,28 @@
-"""Pallas TPU kernel for the fused Meta-SGD inner update.
+"""Pallas TPU kernels for the fused inner update (single θ and client
+plane).
 
-The inner update θ' = θ − α ∘ g is executed once per client per round
-over the full parameter vector — pure memory traffic (3 reads, 1 write,
-1 FMA per element). Unfused, XLA emits it per-leaf as mul+sub pairs; the
-kernel streams 128-lane-aligned tiles through VMEM in a single pass,
-which is the roofline-optimal schedule for this op on TPU.
+The inner update θ' = θ − α ∘ g is executed once per client per inner
+step per round over the full parameter vector — pure memory traffic
+(3 reads, 1 write, 1 FMA per element). Unfused, XLA emits it per-leaf as
+mul+sub pairs; the kernels stream 128-lane-aligned tiles through VMEM in
+a single pass, which is the roofline-optimal schedule for this op on
+TPU.
 
-Layout: callers hand in the packed parameter plane (`utils/flat.py`) — a
-padded (N,) vector with N a multiple of ALIGN = 8 * 128 — and the kernel
-runs a 1-D grid over (block_rows, 128) tiles, block_rows chosen as the
-largest sublane-aligned divisor of N // 128 up to MAX_BLOCK_ROWS.
+Two layouts, both over the packed parameter plane (`utils/flat.py`,
+N a multiple of ALIGN = 8 * 128):
+
+- ``meta_update_flat``: one client, flat (N,) buffers, 1-D grid over
+  (block_rows, 128) tiles — the deployment/adapt path.
+- ``inner_update_plane``: a chunk of C clients adapting in lockstep on a
+  (C, N) client plane, 2-D (client, tile) grid, with θ aliased to the
+  output so the plane updates in place across inner steps. α is a
+  compile-time scalar (MAML/FOMAML/Reptile), a shared (N,) vector, or a
+  per-client (C, N) block (Meta-SGD, where α rides the plane as a
+  learnable input). ``inner_update_plane`` carries a custom VJP
+  (θ' = θ − α∘g ⇒ dθ = ḡ, dα = −g∘ḡ reduced to α's shape, dg = −α∘ḡ) so
+  MAML/Meta-SGD can reverse-differentiate through the fused kernel; the
+  backward is plain jnp — elementwise, fused by XLA, and only live on
+  second-order paths.
 """
 from __future__ import annotations
 
@@ -63,3 +76,133 @@ def meta_update_flat(theta, alpha, g, *, interpret: bool = False):
         interpret=interpret,
     )(reshape(theta), reshape(alpha), reshape(g))
     return out.reshape(N)
+
+
+# ---- client-plane inner update ------------------------------------------
+
+def _plane_kernel_scalar(theta_ref, g_ref, out_ref, *, alpha):
+    out_ref[...] = (theta_ref[...].astype(jnp.float32)
+                    - alpha * g_ref[...].astype(jnp.float32)
+                    ).astype(out_ref.dtype)
+
+
+def _plane_kernel_vec(theta_ref, alpha_ref, g_ref, out_ref):
+    out_ref[...] = (theta_ref[...].astype(jnp.float32)
+                    - alpha_ref[...].astype(jnp.float32)
+                    * g_ref[...].astype(jnp.float32)).astype(out_ref.dtype)
+
+
+def _plane_grid(C: int, N: int):
+    assert N % (SUBLANE * LANE) == 0, N
+    total_rows = N // LANE
+    rows = choose_block_rows(total_rows)
+    spec3 = pl.BlockSpec((1, rows, LANE), lambda c, i: (c, i, 0))
+    return total_rows, rows, (C, total_rows // rows), spec3
+
+
+# NOTE: deliberately NOT wrapped in jax.jit. Production callers jit the
+# whole meta step, so compiled-mode dispatch cost is irrelevant; and an
+# eager interpret-mode call must round mul-then-sub exactly like the
+# eager per-leaf tree reference (XLA:CPU contracts θ − α∘g into an FMA
+# whenever the expression compiles as one program — optimization_barrier
+# does not stop LLVM's fp contraction — which would put the "bit-exact
+# oracle" 1 ulp off the tree path).
+def _inner_plane_scalar_call(theta, g, *, alpha: float,
+                             interpret: bool = False):
+    C, N = theta.shape
+    total_rows, rows, grid, spec = _plane_grid(C, N)
+    shape3 = (C, total_rows, LANE)
+    out = pl.pallas_call(
+        functools.partial(_plane_kernel_scalar, alpha=alpha),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(shape3, theta.dtype),
+        input_output_aliases={0: 0},      # θ plane updates in place
+        interpret=interpret,
+    )(theta.reshape(shape3), g.reshape(shape3))
+    return out.reshape(C, N)
+
+
+def _inner_plane_vec_call(theta, alpha, g, *, interpret: bool = False):
+    # un-jitted on purpose — see _inner_plane_scalar_call
+    C, N = theta.shape
+    total_rows, rows, grid, spec = _plane_grid(C, N)
+    shape3 = (C, total_rows, LANE)
+    if alpha.ndim == 1:        # shared (N,) α, broadcast over the chunk
+        a_spec = pl.BlockSpec((rows, LANE), lambda c, i: (i, 0))
+        a = alpha.reshape(total_rows, LANE)
+    else:                      # per-client (C, N) α block
+        a_spec = spec
+        a = alpha.reshape(shape3)
+    out = pl.pallas_call(
+        _plane_kernel_vec,
+        grid=grid,
+        in_specs=[spec, a_spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(shape3, theta.dtype),
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(theta.reshape(shape3), a, g.reshape(shape3))
+    return out.reshape(C, N)
+
+
+def _reduce_to_shape(x, shape):
+    """Sum-reduce ``x`` down to ``shape`` (inverse of broadcasting)."""
+    if x.shape == tuple(shape):
+        return x
+    extra = x.ndim - len(shape)
+    if extra:
+        x = jnp.sum(x, axis=tuple(range(extra)))
+    axes = tuple(i for i, d in enumerate(shape) if d == 1 and x.shape[i] != 1)
+    if axes:
+        x = jnp.sum(x, axis=axes, keepdims=True)
+    return x
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _inner_plane_scalar(alpha, interpret, theta, g):
+    return _inner_plane_scalar_call(theta, g, alpha=alpha,
+                                    interpret=interpret)
+
+
+def _inner_plane_scalar_fwd(alpha, interpret, theta, g):
+    return _inner_plane_scalar(alpha, interpret, theta, g), None
+
+
+def _inner_plane_scalar_bwd(alpha, interpret, _res, ct):
+    return ct, -alpha * ct
+
+
+_inner_plane_scalar.defvjp(_inner_plane_scalar_fwd, _inner_plane_scalar_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _inner_plane_vec(interpret, theta, alpha, g):
+    return _inner_plane_vec_call(theta, alpha, g, interpret=interpret)
+
+
+def _inner_plane_vec_fwd(interpret, theta, alpha, g):
+    return _inner_plane_vec(interpret, theta, alpha, g), (alpha, g)
+
+
+def _inner_plane_vec_bwd(interpret, res, ct):
+    alpha, g = res
+    d_alpha = _reduce_to_shape(-g * ct, alpha.shape)
+    return ct, d_alpha, -alpha * ct
+
+
+_inner_plane_vec.defvjp(_inner_plane_vec_fwd, _inner_plane_vec_bwd)
+
+
+def inner_update_plane(theta, alpha, g, *, interpret: bool = False):
+    """Fused θ ← θ − α∘g over a (C, N) client plane, differentiable.
+
+    theta, g: (C, N) with N % (8*128) == 0. alpha: python scalar
+    (compile-time constant baked into the kernel), (N,) shared
+    per-coordinate rates, or (C, N) per-client rates. Input/output
+    aliasing updates θ in place; a custom VJP makes the op safe under
+    reverse-mode autodiff (second-order MAML / Meta-SGD)."""
+    if isinstance(alpha, (int, float)):
+        return _inner_plane_scalar(float(alpha), interpret, theta, g)
+    return _inner_plane_vec(interpret, theta, alpha, g)

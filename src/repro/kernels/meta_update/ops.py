@@ -20,7 +20,9 @@ import jax.numpy as jnp
 from repro.kernels.meta_update import ref
 from repro.kernels.meta_update.aggregate import (weighted_aggregate_flat,
                                                  weighted_aggregate_ref)
-from repro.kernels.meta_update.fused import TILE, meta_update_flat  # noqa: F401 (TILE re-exported)
+from repro.kernels.meta_update.fused import (TILE,  # noqa: F401 (re-export)
+                                             inner_update_plane,
+                                             meta_update_flat)
 from repro.utils.flat import plane_for
 
 _DEFAULT_IMPL = os.environ.get("REPRO_META_UPDATE_IMPL", "xla")
@@ -44,19 +46,46 @@ def resolve_impl(impl: str | None) -> str:
 
 
 def meta_update(theta, alpha, grads, *, impl: str | None = None):
-    """θ' = θ − α ∘ g; α is a scalar or a pytree matching θ."""
+    """θ' = θ − α ∘ g; α is a scalar or a pytree matching θ.
+
+    The pallas paths route through the plane kernel's custom VJP
+    (``inner_update``), so the tree inner loop stays reverse-
+    differentiable under a pallas impl (second-order MAML/Meta-SGD used
+    to hit the missing pallas_call VJP here)."""
     impl = resolve_impl(impl)
     if impl == "xla":
         return ref.meta_update_ref(theta, alpha, grads)
     plane = plane_for(theta)
     t = plane.pack(theta)
-    if isinstance(alpha, (int, float)):
-        a = jnp.full_like(t, alpha)
-    else:
-        a = plane.pack(alpha)
-    g = plane.pack(grads)
-    out = meta_update_flat(t, a, g, interpret=(impl == "pallas_interpret"))
-    return plane.unpack(out)
+    a = alpha if isinstance(alpha, (int, float)) else plane.pack(alpha)
+    out = inner_update(t, a, plane.pack(grads), impl=impl)
+    return plane.unpack_ad(out)
+
+
+def inner_update(theta, alpha, g, *, impl: str | None = None):
+    """Fused inner update on flat client-plane buffers, differentiable.
+
+    theta, g: (C, N) — or (N,), treated as a one-client plane — with N a
+    multiple of flat.ALIGN. alpha: python scalar, (N,) shared rates, or
+    a (C, N) per-client block. "xla" is the fused-elementwise oracle;
+    the pallas paths run the single-pass plane kernel
+    (``fused.inner_update_plane``) with its custom VJP, so second-order
+    algorithms can differentiate straight through it."""
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        return ref.inner_update_plane_ref(theta, alpha, g)
+    if not isinstance(alpha, (int, float)) and alpha.ndim == 0:
+        # a 0-d array (e.g. a traced learning rate) can't be baked into
+        # the kernel as a compile-time scalar; run it as shared rates
+        alpha = jnp.broadcast_to(alpha, theta.shape[-1:])
+    squeeze = theta.ndim == 1
+    if squeeze:
+        theta, g = theta[None], g[None]
+        if not isinstance(alpha, (int, float)) and alpha.ndim == 2:
+            raise ValueError("2-D alpha with 1-D theta")
+    out = inner_update_plane(theta, alpha, g,
+                             interpret=(impl == "pallas_interpret"))
+    return out[0] if squeeze else out
 
 
 def weighted_aggregate(gs, w, *, impl: str | None = None):

@@ -9,6 +9,14 @@ import jax
 import jax.numpy as jnp
 
 
+def inner_update_plane_ref(theta, alpha, grads):
+    """Flat oracle for the client-plane inner update: θ − α∘g over
+    (C, N) (or (N,)) buffers with α a scalar, (N,), or (C, N)."""
+    return (theta.astype(jnp.float32)
+            - jnp.asarray(alpha, jnp.float32) * grads.astype(jnp.float32)
+            ).astype(theta.dtype)
+
+
 def meta_update_ref(theta, alpha, grads):
     if isinstance(alpha, (int, float)):
         return jax.tree.map(

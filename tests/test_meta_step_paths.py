@@ -1,12 +1,16 @@
 """Execution-path equivalence for the meta step.
 
-vmap / scan / chunked client axes (incl. non-divisor chunk sizes) and
-the packed parameter plane (xla and pallas_interpret kernels) must all
-produce the same φ and the same weighted metrics after a round. Also
-covers the fused outer-Adam and weighted-aggregation kernels against
-their jnp oracles, and FlatPlane pack/unpack round-tripping. None of
-this needs the optional `hypothesis` dependency, so kernel equivalence
-stays covered even when test_kernels_meta_update is skipped.
+vmap / scan / chunked / sharded client axes (incl. non-divisor chunk
+sizes), the packed parameter plane (xla and pallas_interpret kernels),
+and the fused client-plane inner loop (``client_plane=True``, all four
+algorithms) must all produce the same φ and the same weighted metrics
+after a round. Also covers the fused inner-update plane kernel (values
+and custom VJP), the fused outer-Adam and weighted-aggregation kernels
+against their jnp oracles, FlatPlane pack/unpack round-tripping, and
+bit-identity of the ``adapt`` deployment path between the tree and
+packed inner loops. None of this needs the optional `hypothesis`
+dependency, so kernel equivalence stays covered even when
+test_kernels_meta_update is skipped.
 """
 import jax
 import jax.numpy as jnp
@@ -16,6 +20,7 @@ import pytest
 from repro.core import make_algorithm
 from repro.core.fedmeta import (federated_meta_step, init_packed_state,
                                 make_packed_meta_train_step)
+from repro.kernels.meta_update import ops as mu_ops
 from repro.kernels.meta_update.aggregate import (weighted_aggregate_flat,
                                                  weighted_aggregate_ref)
 from repro.optim import adam, sgd
@@ -29,6 +34,41 @@ def quad_loss(params, batch):
 
 def quad_eval(params, batch):
     return quad_loss(params, batch), {"accuracy": jnp.zeros(())}
+
+
+def _one_device_mesh():
+    """shard_map runs unchanged on a 1-device mesh, so the sharded axis
+    (padding, psum, local aggregation) is exercised on any host; the CI
+    multi-device job re-runs this file with 4 forced host devices."""
+    return jax.make_mesh((jax.device_count(),), ("clients",))
+
+
+def _make_round(rng, algo_name, m=5):
+    theta = {"w": jnp.asarray(rng.normal(0, 1, (7,)), jnp.float32),
+             "b": jnp.asarray(rng.normal(0, 1, (3,)), jnp.float32)}
+    sup = jnp.asarray(rng.normal(0, 1, (m, 7)), jnp.float32)
+    qry = jnp.asarray(rng.normal(0, 1, (m, 7)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.5, 3.0, (m,)), jnp.float32)
+    algo = make_algorithm(algo_name, quad2_loss, quad2_eval, inner_lr=0.1,
+                          inner_steps=2)
+    phi = algo.init_state(jax.random.PRNGKey(0), lambda k: theta)
+    return algo, phi, sup, qry, w
+
+
+def quad2_loss(params, batch):
+    return (0.5 * jnp.sum(jnp.square(params["w"] - batch))
+            + 0.1 * jnp.sum(params["b"] * batch[:3].sum()))
+
+
+def quad2_eval(params, batch):
+    return quad2_loss(params, batch), {"accuracy": jnp.zeros(())}
+
+
+def _assert_phi_close(out_phi, ref_phi):
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6),
+        out_phi, ref_phi)
 
 
 @pytest.fixture
@@ -199,3 +239,209 @@ def test_plane_for_is_cached(rng):
     t1 = {"w": jnp.zeros((4, 4), jnp.float32)}
     t2 = {"w": jnp.ones((4, 4), jnp.float32)}
     assert plane_for(t1) is plane_for(t2)
+
+
+def test_unpack_ad_matches_unpack_and_grad(rng):
+    tree = {"w": jnp.asarray(rng.normal(0, 1, (13, 7)), jnp.float32),
+            "b": jnp.asarray(rng.normal(0, 1, (11,)), jnp.float32)}
+    plane = plane_for(tree)
+    flat = plane.pack(tree)
+    out = plane.unpack_ad(flat)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(out[k]),
+                                      np.asarray(plane.unpack(flat)[k]))
+
+    def f_ad(x):
+        t = plane.unpack_ad(x)
+        return jnp.sum(jnp.sin(t["w"])) + jnp.sum(t["b"] ** 2)
+
+    def f_plain(x):
+        t = plane.unpack(x)
+        return jnp.sum(jnp.sin(t["w"])) + jnp.sum(t["b"] ** 2)
+
+    np.testing.assert_allclose(np.asarray(jax.grad(f_ad)(flat)),
+                               np.asarray(jax.grad(f_plain)(flat)),
+                               rtol=1e-6, atol=1e-7)
+    # second order (reverse-over-reverse) composes through the custom rule
+    def meta(x):
+        g = jax.grad(f_ad)(x)
+        return jnp.sum(jnp.cos(plane.unpack_ad(x - 0.1 * g)["w"]))
+
+    def meta_plain(x):
+        g = jax.grad(f_plain)(x)
+        return jnp.sum(jnp.cos(plane.unpack(x - 0.1 * g)["w"]))
+
+    np.testing.assert_allclose(np.asarray(jax.grad(meta)(flat)),
+                               np.asarray(jax.grad(meta_plain)(flat)),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---- fused inner-update plane kernel ------------------------------------
+
+@pytest.mark.parametrize("alpha_kind", ["scalar", "shared", "per_client"])
+def test_inner_update_plane_kernel_matches_ref(rng, alpha_kind):
+    C, N = 3, 2 * ALIGN
+    T = jnp.asarray(rng.normal(0, 1, (C, N)), jnp.float32)
+    G = jnp.asarray(rng.normal(0, 1, (C, N)), jnp.float32)
+    alpha = {"scalar": 0.05,
+             "shared": jnp.asarray(rng.uniform(0, 0.1, (N,)), jnp.float32),
+             "per_client": jnp.asarray(rng.uniform(0, 0.1, (C, N)),
+                                       jnp.float32)}[alpha_kind]
+    ref = mu_ops.inner_update(T, alpha, G, impl="xla")
+    out = mu_ops.inner_update(T, alpha, G, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("alpha_kind", ["scalar", "shared", "per_client"])
+def test_inner_update_plane_custom_vjp(rng, alpha_kind):
+    """The kernel's custom VJP matches autodiff through the jnp oracle —
+    this is what second-order MAML/Meta-SGD differentiate through."""
+    C, N = 2, ALIGN
+    T = jnp.asarray(rng.normal(0, 1, (C, N)), jnp.float32)
+    G = jnp.asarray(rng.normal(0, 1, (C, N)), jnp.float32)
+    alpha = {"scalar": 0.07,
+             "shared": jnp.asarray(rng.uniform(0, 0.1, (N,)), jnp.float32),
+             "per_client": jnp.asarray(rng.uniform(0, 0.1, (C, N)),
+                                       jnp.float32)}[alpha_kind]
+
+    def make_f(impl):
+        def f(*args):
+            if alpha_kind == "scalar":
+                t, g = args
+                return jnp.sum(jnp.sin(
+                    mu_ops.inner_update(t, alpha, g, impl=impl)))
+            t, a, g = args
+            return jnp.sum(jnp.sin(mu_ops.inner_update(t, a, g, impl=impl)))
+        return f
+
+    args = (T, G) if alpha_kind == "scalar" else (T, alpha, G)
+    argnums = tuple(range(len(args)))
+    ref = jax.grad(make_f("xla"), argnums=argnums)(*args)
+    out = jax.grad(make_f("pallas_interpret"), argnums=argnums)(*args)
+    for r, o in zip(ref, out):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---- client-plane inner loop & sharded axis -----------------------------
+
+ALGOS = ["maml", "fomaml", "meta-sgd", "reptile"]
+
+
+@pytest.mark.parametrize("algo_name", ALGOS)
+@pytest.mark.parametrize("axis,chunk", [
+    ("vmap", None), ("scan", None), ("chunked", 2), ("sharded", None),
+])
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+def test_client_plane_matches_tree(rng, algo_name, axis, chunk, impl):
+    """The fused flat inner loop reproduces the tree round for every
+    algorithm, on every client axis, under both kernel impls."""
+    algo, phi, sup, qry, w = _make_round(rng, algo_name)
+    opt = adam(1e-2)
+    ref_phi, _, ref_met = federated_meta_step(
+        algo, opt, phi, opt.init(phi), sup, qry, w, client_axis="vmap")
+    plane = plane_for(phi)
+    step = make_packed_meta_train_step(
+        algo, opt, plane, client_axis=axis, client_chunk=chunk, impl=impl,
+        client_plane=True, mesh=_one_device_mesh())
+    state, met = step(init_packed_state(opt, plane, phi), sup, qry, w)
+    _assert_phi_close(plane.unpack(state["phi"]), ref_phi)
+    np.testing.assert_allclose(float(met["query_loss"]),
+                               float(ref_met["query_loss"]), rtol=1e-5)
+
+
+@pytest.mark.parametrize("pipeline", ["tree", "packed", "packed_plane"])
+def test_sharded_axis_matches_vmap(rng, pipeline):
+    """client_axis="sharded" (shard_map + psum-reduced partials) produces
+    the identical round for every pipeline, including a non-divisor
+    client count (zero-weight padding)."""
+    m = 5                                    # never divisible by >1 devs
+    algo, phi, sup, qry, w = _make_round(rng, "meta-sgd", m=m)
+    opt = adam(1e-2)
+    ref_phi, _, ref_met = federated_meta_step(
+        algo, opt, phi, opt.init(phi), sup, qry, w, client_axis="vmap")
+    mesh = _one_device_mesh()
+    if pipeline == "tree":
+        out_phi, _, met = federated_meta_step(
+            algo, opt, phi, opt.init(phi), sup, qry, w,
+            client_axis="sharded", mesh=mesh)
+    else:
+        plane = plane_for(phi)
+        step = make_packed_meta_train_step(
+            algo, opt, plane, client_axis="sharded", mesh=mesh,
+            client_plane=(pipeline == "packed_plane"))
+        state, met = step(init_packed_state(opt, plane, phi), sup, qry, w)
+        out_phi = plane.unpack(state["phi"])
+    _assert_phi_close(out_phi, ref_phi)
+    np.testing.assert_allclose(float(met["query_loss"]),
+                               float(ref_met["query_loss"]), rtol=1e-5)
+
+
+def test_sharded_with_local_chunking(rng):
+    """client_chunk composes with the sharded axis (scan of chunks inside
+    each device's shard)."""
+    algo, phi, sup, qry, w = _make_round(rng, "fomaml", m=6)
+    opt = adam(1e-2)
+    ref_phi, _, _ = federated_meta_step(
+        algo, opt, phi, opt.init(phi), sup, qry, w, client_axis="vmap")
+    plane = plane_for(phi)
+    step = make_packed_meta_train_step(
+        algo, opt, plane, client_axis="sharded", client_chunk=2,
+        mesh=_one_device_mesh())
+    state, _ = step(init_packed_state(opt, plane, phi), sup, qry, w)
+    _assert_phi_close(plane.unpack(state["phi"]), ref_phi)
+
+
+def test_client_plane_bf16_block(rng):
+    """The reduced-precision gradient block works through the client
+    plane too (G rows cast before aggregation, f32 accumulation)."""
+    algo, phi, sup, qry, w = _make_round(rng, "fomaml")
+    opt = adam(1e-2)
+    ref_phi, _, _ = federated_meta_step(
+        algo, opt, phi, opt.init(phi), sup, qry, w, client_axis="vmap")
+    plane = plane_for(phi)
+    step = make_packed_meta_train_step(
+        algo, opt, plane, client_plane=True, block_dtype=jnp.bfloat16)
+    state, _ = step(init_packed_state(opt, plane, phi), sup, qry, w)
+    out_phi = plane.unpack(state["phi"])
+    np.testing.assert_allclose(np.asarray(out_phi["theta"]["w"]),
+                               np.asarray(ref_phi["theta"]["w"]),
+                               rtol=5e-2, atol=5e-3)
+
+
+def test_metasgd_integer_seeds_differ():
+    """Integer seeds must produce distinct α initializations (the seed
+    used to be silently replaced by PRNGKey(0))."""
+    algo = make_algorithm("meta-sgd", quad2_loss, quad2_eval, inner_lr=0.1)
+    init = lambda k: {"w": jnp.zeros((7,), jnp.float32)}   # noqa: E731
+    a0 = algo.init_state(0, init)["alpha"]["w"]
+    a1 = algo.init_state(1, init)["alpha"]["w"]
+    assert not np.array_equal(np.asarray(a0), np.asarray(a1))
+    # int seed k and PRNGKey(k) agree
+    a0k = algo.init_state(jax.random.PRNGKey(0), init)["alpha"]["w"]
+    np.testing.assert_array_equal(np.asarray(a0), np.asarray(a0k))
+
+
+# ---- deployment path: adapt must be bit-identical -----------------------
+
+@pytest.mark.parametrize("algo_name", ALGOS)
+@pytest.mark.parametrize("impl", ["xla", "pallas_interpret"])
+def test_adapt_packed_bit_identical(rng, algo_name, impl):
+    """paper §3.2: the deployed adapted θ must be bit-identical between
+    the tree inner loop and the packed/fused inner loop, for all four
+    algorithms, with both inner loops under the same impl. (Comparing
+    across impls is 1 ulp apart on CPU: XLA contracts θ − α∘g into an
+    FMA whenever it compiles the expression as one program, while the
+    eager per-leaf path rounds the product first.)"""
+    algo, phi, sup, qry, w = _make_round(rng, algo_name)
+    mu_ops.set_default_impl(impl)
+    try:
+        theta_tree = algo.adapt(phi, sup[0], steps=3)
+    finally:
+        mu_ops.set_default_impl("xla")
+    theta_flat = algo.adapt_packed(phi, sup[0], steps=3, impl=impl)
+    for k in theta_tree:
+        np.testing.assert_array_equal(np.asarray(theta_tree[k]),
+                                      np.asarray(theta_flat[k]),
+                                      err_msg=f"{algo_name}/{impl}/{k}")

@@ -107,6 +107,22 @@ def test_comm_tracker_accounting():
     assert t.total_flops == 5 * 10 * 1e6
 
 
+def test_comm_tracker_block_dtype_upload():
+    """With a bf16 gradient block, the upload leg counts 2 bytes/param
+    (what is actually transmitted) while the download leg stays f32."""
+    phi = {"theta": {"w": jnp.zeros((1000,), jnp.float32)}}
+    t = CommTracker.for_state(phi, clients_per_round=10,
+                              block_dtype=jnp.bfloat16)
+    t.tick(1)
+    assert t.download_bytes == 10 * 4000
+    assert t.upload_bytes == 10 * 2000
+    assert t.total_bytes == 10 * 6000
+    # f32 block (or no block dtype): symmetric, as before
+    t2 = CommTracker.for_state(phi, clients_per_round=10)
+    t2.tick(1)
+    assert t2.upload_bytes == t2.download_bytes == 10 * 4000
+
+
 def test_fedavg_identical_clients_fixed_point(rng):
     """If every client holds the same data, one FedAvg round equals plain
     local training (aggregation of identical models is identity)."""
