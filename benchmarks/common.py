@@ -4,18 +4,21 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core import classification_loss, make_algorithm
-from repro.data.federated import sample_task_batch
 from repro.federated.fedavg import FedAvgTrainer
 from repro.federated.server import (FederatedTrainer, evaluate_global,
-                                    evaluate_meta, make_global_evaluator,
-                                    make_meta_evaluator)
+                                    evaluate_meta)
 from repro.optim import adam
 
 META_METHODS = ("maml", "fomaml", "meta-sgd")
+
+
+def _rounds_to_target(history, target_acc):
+    if not target_acc:
+        return None
+    from repro.federated.experiment import comm_to_target
+    return (comm_to_target(history, target_acc) or {}).get("rounds")
 
 
 def run_fedmeta(method, model, dataset_splits, *, rounds, clients_per_round,
@@ -33,32 +36,18 @@ def run_fedmeta(method, model, dataset_splits, *, rounds, clients_per_round,
     state = tr.init(jax.random.PRNGKey(seed), model.init)
     tr.measure_flops(state)
     t0 = time.time()
-    rounds_to_target = None
-    evaluator = make_meta_evaluator(algo)
     ev = eval_every or max(rounds // 8, 1)
-    for start in range(0, rounds, ev):
-        n = min(ev, rounds - start)
-        state = tr.run(state, n)
-        acc, _ = evaluate_meta(algo, state["phi"], val,
-                               support_frac=support_frac,
-                               support_size=support_size,
-                               query_size=query_size, seed=seed,
-                               evaluator=evaluator)
-        tr.history.append({"round": start + n, "val_acc": acc,
-                           **tr.comm.summary()})
-        if target_acc and rounds_to_target is None and acc >= target_acc:
-            rounds_to_target = start + n
-    test_acc, per_client = evaluate_meta(algo, state["phi"], test,
-                                         support_frac=support_frac,
-                                         support_size=support_size,
-                                         query_size=query_size, seed=seed,
-                                         evaluator=evaluator)
+    state = tr.run(state, rounds, eval_every=ev, eval_clients=val)
+    test_acc, per_client, _ = evaluate_meta(
+        algo, tr.phi_tree(state), test, support_frac=support_frac,
+        support_size=support_size, query_size=query_size, seed=seed,
+        evaluator=tr.evaluator())
     return {"method": method, "test_acc": test_acc,
             "per_client": per_client.tolist(),
             "seconds": time.time() - t0,
             "history": tr.history, "comm": tr.comm.summary(),
-            "rounds_to_target": rounds_to_target, "state": state,
-            "algo": algo}
+            "rounds_to_target": _rounds_to_target(tr.history, target_acc),
+            "state": state, "algo": algo}
 
 
 def run_fedavg(model, dataset_splits, *, rounds, clients_per_round,
@@ -69,46 +58,22 @@ def run_fedavg(model, dataset_splits, *, rounds, clients_per_round,
     train, val, test = dataset_splits
     loss_fn, eval_fn = classification_loss(model.apply)
     fa = FedAvgTrainer(loss_fn, eval_fn, local_lr=local_lr,
-                       local_steps=local_steps)
-    state = fa.init_state(jax.random.PRNGKey(seed), model.init)
-    from repro.federated.comm import CommTracker
-    comm = CommTracker.for_state(state, clients_per_round)
-    rng = np.random.RandomState(seed)
-    step = jax.jit(lambda th, bx, by, w: fa.round_step(
-        {"theta": th}, (bx, by), w)["theta"])
+                       local_steps=local_steps, train_clients=train,
+                       clients_per_round=clients_per_round,
+                       support_frac=support_frac, support_size=support_size,
+                       query_size=query_size, seed=seed, meta_eval=meta_eval)
+    state = fa.init(jax.random.PRNGKey(seed), model.init)
+    fa.measure_flops(state)
     t0 = time.time()
-    history = []
-    rounds_to_target = None
     ev = eval_every or max(rounds // 8, 1)
-    ft = fa.finetune if meta_eval else None
-    evaluator = make_global_evaluator(eval_fn, ft)
-    for r in range(rounds):
-        tb = sample_task_batch(train, clients_per_round, 0.5,
-                               support_size, query_size, rng)
-        # FedAvg trains on ALL local data (paper §4.1): support+query
-        bx = np.concatenate([tb.support_x[:, None], tb.query_x[:, None]], 1)
-        by = np.concatenate([tb.support_y[:, None], tb.query_y[:, None]], 1)
-        reps = int(np.ceil(local_steps / 2))
-        bx = np.tile(bx, (1, reps, 1) + (1,) * (bx.ndim - 3))[:, :local_steps]
-        by = np.tile(by, (1, reps, 1))[:, :local_steps]
-        state["theta"] = step(state["theta"], jnp.asarray(bx),
-                              jnp.asarray(by), jnp.asarray(tb.weight))
-        comm.tick()
-        if (r + 1) % ev == 0 or r == rounds - 1:
-            acc, _ = evaluate_global(eval_fn, state["theta"], val,
-                                     support_frac=support_frac,
-                                     support_size=support_size,
-                                     query_size=query_size, seed=seed,
-                                     finetune=ft, evaluator=evaluator)
-            history.append({"round": r + 1, "val_acc": acc, **comm.summary()})
-            if target_acc and rounds_to_target is None and acc >= target_acc:
-                rounds_to_target = r + 1
-    test_acc, per_client = evaluate_global(
+    state = fa.run(state, rounds, eval_every=ev, eval_clients=val)
+    test_acc, per_client, _ = evaluate_global(
         eval_fn, state["theta"], test, support_frac=support_frac,
         support_size=support_size, query_size=query_size, seed=seed,
-        finetune=ft, evaluator=evaluator)
-    return {"method": "fedavg(meta)" if meta_eval else "fedavg",
-            "test_acc": test_acc, "per_client": per_client.tolist(),
-            "seconds": time.time() - t0, "history": history,
-            "comm": comm.summary(), "rounds_to_target": rounds_to_target,
+        evaluator=fa.evaluator())
+    return {"method": fa.name, "test_acc": test_acc,
+            "per_client": per_client.tolist(),
+            "seconds": time.time() - t0, "history": fa.history,
+            "comm": fa.comm.summary(),
+            "rounds_to_target": _rounds_to_target(fa.history, target_acc),
             "state": state}

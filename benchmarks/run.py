@@ -72,8 +72,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only",
-                    default="kernels,meta_step,round,table2,fig3,table3,"
-                            "fairness")
+                    default="kernels,meta_step,round,experiment,table2,fig3,"
+                            "table3,fairness")
     ap.add_argument("--rounds", type=int, default=0)
     ap.add_argument("--outdir", default="results/bench")
     args = ap.parse_args()
@@ -111,6 +111,32 @@ def main() -> None:
         print(f"round,{(time.time()-t0)*1e6:.0f},"
               f"client_plane_speedup={f'{spd:.2f}x' if spd else 'n/a'}",
               flush=True)
+
+    if "experiment" in only:
+        from benchmarks import experiment_bench
+        t0 = time.time()
+        # smoke summary goes to a _smoke path — must not clobber the
+        # committed full-run numbers (same guard as the other benches) —
+        # and ALL artifacts stay under --outdir (the committed
+        # results/experiments/ refresh goes through experiment_bench /
+        # examples/compare_fedmeta_fedavg.py directly)
+        out = os.path.join(args.outdir,
+                           "experiment_summary.json" if args.full
+                           else "experiment_summary_smoke.json")
+        summary = experiment_bench.run(
+            dry=not args.full, json_out=out,
+            out_dir=os.path.join(args.outdir,
+                                 "experiments" if args.full
+                                 else "experiments-smoke"))
+        # headline = best FEDMETA reduction; fedavg(meta) is a baseline.
+        # ">=x" strings mark lower bounds and survive into the headline.
+        reds = [v for s in summary.values()
+                for m, v in s["comm_reduction_vs_fedavg"].items()
+                if v and m not in ("fedavg", "fedavg(meta)")]
+        best = max(reds, key=lambda v: float(str(v).lstrip(">="))) \
+            if reds else "n/a"
+        print(f"experiment,{(time.time()-t0)*1e6:.0f},"
+              f"max_comm_reduction={best}", flush=True)
 
     if "table2" in only:
         from benchmarks import table2_leaf

@@ -33,10 +33,25 @@ def main():
     state = trainer.run(state, rounds=120)
 
     # 4. Evaluate on unseen clients: adapt on support, test on query.
-    acc, _ = evaluate_meta(algo, state["phi"], test, support_frac=0.2,
-                           support_size=16, query_size=16)
+    acc, _, _ = evaluate_meta(algo, trainer.phi_tree(state), test,
+                              support_frac=0.2, support_size=16,
+                              query_size=16)
     print(f"FedMeta(MAML) test accuracy on new clients: {acc:.3f}")
     print(f"communication so far: {trainer.comm.summary()}")
+
+    # 5. The FedAvg baseline — same split, same sampling stream, same
+    # communication accounting (the experiment plane runs this at scale;
+    # see examples/compare_fedmeta_fedavg.py).
+    fedavg = FedAvgTrainer(loss_fn, eval_fn, local_lr=1e-3, local_steps=3,
+                           train_clients=train, clients_per_round=4,
+                           support_frac=0.2, support_size=16, query_size=16)
+    fa_state = fedavg.init(jax.random.PRNGKey(0), model.init)
+    fa_state = fedavg.run(fa_state, rounds=120)
+    fa_acc, _, _ = evaluate_global(eval_fn, fa_state["theta"], test,
+                                   support_frac=0.2, support_size=16,
+                                   query_size=16)
+    print(f"FedAvg test accuracy on new clients:       {fa_acc:.3f}")
+    print(f"communication so far: {fedavg.comm.summary()}")
 
 
 if __name__ == "__main__":

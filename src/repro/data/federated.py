@@ -36,6 +36,10 @@ class TaskBatch(NamedTuple):
     query_y: np.ndarray    # (m, Q)
     # weights for weighted server aggregation (∝ #local examples, paper A.2)
     weight: np.ndarray     # (m,)
+    # true per-client query-set sizes *before* the fixed-shape resample —
+    # the §4.1 "accuracy w.r.t. all data points" evaluation weights each
+    # client by how many query examples it actually holds
+    query_count: np.ndarray = None  # (m,) int
 
 
 @dataclasses.dataclass
@@ -102,14 +106,15 @@ def sample_task_batch(clients: list[ClientData], m: int, support_frac: float,
                       rng: np.random.RandomState) -> TaskBatch:
     """Sample m clients uniformly and build a fixed-shape TaskBatch."""
     picks = rng.choice(len(clients), size=m, replace=len(clients) < m)
-    sx, sy, qx, qy, w = [], [], [], [], []
+    sx, sy, qx, qy, w, qc = [], [], [], [], [], []
     for ci in picks:
         c = clients[ci]
         (a, b), (p, q) = support_query_split(c, support_frac, rng)
+        qc.append(len(q))
         a, b = _resample_to(a, b, support_size, rng)
         p, q = _resample_to(p, q, query_size, rng)
         sx.append(a); sy.append(b); qx.append(p); qy.append(q)
         w.append(c.n)
     w = np.asarray(w, np.float32)
     return TaskBatch(np.stack(sx), np.stack(sy), np.stack(qx), np.stack(qy),
-                     w / w.sum())
+                     w / w.sum(), np.asarray(qc, np.int64))

@@ -1,3 +1,5 @@
 from repro.federated.comm import CommTracker
 from repro.federated.fedavg import FedAvgTrainer
 from repro.federated.server import FederatedTrainer, evaluate_meta, evaluate_global
+from repro.federated.experiment import (ExperimentPlan, comm_to_target,
+                                        default_plan, run_comparison)

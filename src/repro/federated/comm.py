@@ -66,6 +66,8 @@ class CommTracker:
         return {
             "rounds": self.rounds,
             "comm_MB": self.total_bytes / 1e6,
+            "upload_MB": self.upload_bytes / 1e6,
+            "download_MB": self.download_bytes / 1e6,
             "client_GFLOPs": self.total_flops / 1e9,
         }
 

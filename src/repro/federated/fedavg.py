@@ -7,17 +7,33 @@ of the returned client models.
 
 FedAvg(Meta) is an *evaluation-time* variant (paper §4.1): the same
 trained global model is fine-tuned on a test client's support set before
-testing on its query set — handled in server.evaluate_global.
+testing on its query set (``meta_eval=True`` / `finetune`).
+
+This trainer is at *parity* with `server.FederatedTrainer`: the same
+`run(state, rounds, eval_every, eval_clients)` driver loop, a
+`CommTracker` (download = full model θ, upload = full model θ — FedAvg
+ships the whole model both ways every round, the asymmetry the paper's
+communication claim exploits), weighted aggregation from
+`TaskBatch.weight`, per-round history records, and a chunked client
+axis that reuses `core/fedmeta._scan_chunks`. This is what lets the
+experiment plane (`federated/experiment.py`) run FedAvg and FedMeta on
+the identical client split and sampling stream.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core.fedmeta import (_normalize_weights, _scan_chunks,
+                                _weighted_metrics)
+from repro.data.federated import sample_task_batch
+from repro.federated.comm import CommTracker, measure_client_flops
 from repro.optim import adam, sgd
+from repro.utils.pytree import tree_add, tree_zeros_like
 
 
 @dataclasses.dataclass
@@ -28,14 +44,63 @@ class FedAvgTrainer:
     local_steps: int = 5
     local_optimizer: str = "adam"          # paper A.2 uses Adam locally
     name: str = "fedavg"
+    # ---- driver-loop parity with FederatedTrainer --------------------
+    train_clients: Optional[list] = None
+    clients_per_round: int = 4
+    support_frac: float = 0.5       # split recorded per batch; FedAvg
+    support_size: int = 16          # trains on support+query combined
+    query_size: int = 16
+    weighted: bool = True           # paper A.2: weight by local data count
+    client_chunk: Optional[int] = None   # scan-of-chunks over clients
+    local_batch_size: Optional[int] = None     # None = support_size
+    finetune_batch_size: Optional[int] = None  # None = full support size
+    meta_eval: bool = False         # FedAvg(Meta) scoring at eval time
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.meta_eval and self.name == "fedavg":
+            self.name = "fedavg(meta)"
+        # task-sampling stream: consumes exactly one `sample_task_batch`
+        # per round — the SAME RandomState call pattern as
+        # FederatedTrainer, so both trainers see identical client picks
+        # and support/query splits under a shared seed. Local minibatch
+        # indices come from a separate stream so they cannot desync it.
+        self._rng = np.random.RandomState(self.seed)
+        self._local_rng = np.random.RandomState(self.seed + 0x5EED)
+        self._step = None
+        self._evaluator = None
+        self.comm: Optional[CommTracker] = None
+        self.history: list = []
 
     def _opt(self):
         return (adam(self.local_lr) if self.local_optimizer == "adam"
                 else sgd(self.local_lr))
 
-    def init_state(self, key, model_init):
-        return {"theta": model_init(key)}
+    # ---- state ------------------------------------------------------
+    def init(self, key, model_init):
+        state = {"theta": model_init(key)}
+        self.comm = CommTracker.for_state(state["theta"],
+                                          self.clients_per_round)
+        return state
 
+    def init_state(self, key, model_init):
+        return self.init(key, model_init)
+
+    def phi_tree(self, state):
+        """The global model as a pytree (parity with FederatedTrainer)."""
+        return state["theta"]
+
+    def evaluator(self):
+        """The trainer's jitted global evaluator (finetuning when
+        ``meta_eval``) — pass to `evaluate_global` to amortize
+        compilation across eval calls. Built lazily."""
+        if self._evaluator is None:
+            from repro.federated.server import make_global_evaluator
+            self._evaluator = make_global_evaluator(
+                self.eval_fn, self.finetune if self.meta_eval else None)
+        return self._evaluator
+
+    # ---- client procedure -------------------------------------------
     def local_train(self, theta, batches):
         """batches: pytree with leading (steps,) axis of minibatches."""
         opt = self._opt()
@@ -49,21 +114,131 @@ class FedAvgTrainer:
         (theta, _), _ = jax.lax.scan(body, (theta, opt.init(theta)), batches)
         return theta
 
+    def finetune(self, theta, support, steps: int | None = None, key=None):
+        """FedAvg(Meta): fine-tune on a test client's support set with
+        *per-step seeded minibatches* (paper A.2 local training), not one
+        identical full-support batch repeated every step."""
+        reps = steps or self.local_steps
+        n = jax.tree.leaves(support)[0].shape[0]
+        bs = min(self.finetune_batch_size or n, n)
+        key = jax.random.PRNGKey(self.seed) if key is None else key
+        # with-replacement draws: stochastic per step even at bs == n,
+        # and jit-friendly inside the vmapped global evaluator
+        idx = jax.random.randint(key, (reps, bs), 0, n)
+        batches = jax.tree.map(lambda x: x[idx], support)
+        return self.local_train(theta, batches)
+
+    # ---- server round -----------------------------------------------
+    def _round(self, theta, batches, eval_batch, w):
+        """Weighted model average over the client axis.
+
+        batches: leading (m, steps, B, ...) local minibatches;
+        eval_batch: optional (m, P, ...) per-client data the locally
+        trained model is scored on (train-loss/accuracy metrics);
+        w: normalized (m,) aggregation weights."""
+
+        def chunk_fn(b, e, wc):
+            def one(bi, ei):
+                th = self.local_train(theta, bi)
+                if ei is None:
+                    return th, {}
+                loss, met = self.eval_fn(th, ei)
+                return th, {"train_loss": loss, **met}
+
+            thetas, mets = jax.vmap(one)(b, e)
+            partial = jax.tree.map(
+                lambda t: jnp.tensordot(wc, t.astype(jnp.float32), axes=1),
+                thetas)
+            return partial, _weighted_metrics(wc, mets)
+
+        m = jax.tree.leaves(batches)[0].shape[0]
+        if self.client_chunk and self.client_chunk < m:
+            acc0 = tree_zeros_like(
+                jax.tree.map(lambda x: x.astype(jnp.float32), theta))
+            avg, metrics = _scan_chunks(chunk_fn, acc0, tree_add, batches,
+                                        eval_batch, w, m, self.client_chunk)
+        else:
+            avg, metrics = chunk_fn(batches, eval_batch, w)
+        new_theta = jax.tree.map(lambda a, t: a.astype(t.dtype), avg, theta)
+        return new_theta, metrics
+
     def round_step(self, state, client_batches, weights=None):
         """client_batches: leading axes (m, steps, ...) on every leaf."""
         m = jax.tree.leaves(client_batches)[0].shape[0]
-        w = (jnp.full((m,), 1.0 / m, jnp.float32) if weights is None
-             else weights / jnp.sum(weights))
-        thetas = jax.vmap(lambda b: self.local_train(state["theta"], b))(
-            client_batches)
-        theta = jax.tree.map(
-            lambda t: jnp.tensordot(w, t.astype(jnp.float32),
-                                    axes=1).astype(t.dtype), thetas)
+        w = _normalize_weights(
+            None if weights is None else jnp.asarray(weights), m)
+        theta, _ = self._round(state["theta"], client_batches, None, w)
         return {"theta": theta}
 
-    def finetune(self, theta, support, steps: int | None = None):
-        """FedAvg(Meta): fine-tune on a test client's support set."""
-        reps = steps or self.local_steps
-        batches = jax.tree.map(
-            lambda x: jnp.broadcast_to(x[None], (reps,) + x.shape), support)
-        return self.local_train(theta, batches)
+    def _make_step(self):
+        def step(state, batches, eval_batch, w):
+            theta, metrics = self._round(state["theta"], batches, eval_batch,
+                                         w)
+            return {"theta": theta}, metrics
+
+        return jax.jit(step)
+
+    def _local_batches(self, tb):
+        """Per-round local training minibatches from the sampled clients'
+        FULL local data (support+query — FedAvg has no query split, paper
+        §4.1): (m, steps, B, ...) with per-step indices drawn from the
+        dedicated local stream."""
+        px = np.concatenate([tb.support_x, tb.query_x], axis=1)
+        py = np.concatenate([tb.support_y, tb.query_y], axis=1)
+        m, pool = py.shape[:2]
+        bs = min(self.local_batch_size or self.support_size, pool)
+        idx = self._local_rng.randint(0, pool,
+                                      size=(m, self.local_steps, bs))
+        rows = np.arange(m)[:, None, None]
+        return (px[rows, idx], py[rows, idx]), (px, py)
+
+    def measure_flops(self, state):
+        """One-off XLA cost analysis of one client's local training."""
+        tb = sample_task_batch(self.train_clients, 1, self.support_frac,
+                               self.support_size, self.query_size, self._rng)
+        (bx, by), _ = self._local_batches(tb)
+        batch = (jnp.asarray(bx[0]), jnp.asarray(by[0]))
+        fl = measure_client_flops(
+            lambda b: self.local_train(state["theta"], b), batch)
+        if self.comm:
+            self.comm.flops_per_client = fl
+        return fl
+
+    def run(self, state, rounds: int, eval_every: int = 0,
+            eval_clients=None, log: Callable = None):
+        """Driver loop at parity with FederatedTrainer.run: per-round
+        comm ticks and history records, periodic evaluation on held-out
+        clients (FedAvg(Meta) fine-tunes when ``meta_eval=True``)."""
+        from repro.federated.server import evaluate_global
+        if self._step is None:
+            self._step = self._make_step()
+        evaluator = self.evaluator()
+        for r in range(rounds):
+            tb = sample_task_batch(self.train_clients, self.clients_per_round,
+                                   self.support_frac, self.support_size,
+                                   self.query_size, self._rng)
+            (bx, by), (px, py) = self._local_batches(tb)
+            m = len(tb.weight)
+            w = _normalize_weights(
+                jnp.asarray(tb.weight) if self.weighted else None, m)
+            state, metrics = self._step(
+                state, (jnp.asarray(bx), jnp.asarray(by)),
+                (jnp.asarray(px), jnp.asarray(py)), w)
+            self.comm.tick()
+            rec = {"round": r + 1,
+                   **{k: float(v) for k, v in metrics.items()},
+                   **self.comm.summary()}
+            if eval_every and eval_clients is not None and \
+                    ((r + 1) % eval_every == 0 or r == rounds - 1):
+                acc, _, loss = evaluate_global(
+                    self.eval_fn, state["theta"], eval_clients,
+                    support_frac=self.support_frac,
+                    support_size=self.support_size,
+                    query_size=self.query_size, seed=self.seed,
+                    evaluator=evaluator)
+                rec["eval_acc"] = acc
+                rec["eval_loss"] = loss
+            self.history.append(rec)
+            if log:
+                log(rec)
+        return state

@@ -29,7 +29,18 @@ def _batch_eval(eval_one, clients, m, support_frac, support_size, query_size,
                            rng)
     accs, losses = eval_one((tb.support_x, tb.support_y),
                             (tb.query_x, tb.query_y))
-    return np.asarray(accs), np.asarray(losses)
+    counts = (np.ones((m,), np.float64) if tb.query_count is None
+              else np.asarray(tb.query_count, np.float64))
+    return np.asarray(accs), np.asarray(losses), counts
+
+
+def _count_weighted(accs, losses, counts):
+    """§4.1 evaluation: accuracy w.r.t. *all data points*, i.e. each
+    client's (fixed-shape resampled) query accuracy weighted by the
+    number of query examples that client actually holds — not an
+    unweighted mean over clients. Same reduction for the loss."""
+    w = counts / counts.sum()
+    return float(np.sum(w * accs)), float(np.sum(w * losses))
 
 
 def make_meta_evaluator(algo, adapt_steps=None):
@@ -61,26 +72,31 @@ def make_global_evaluator(eval_fn, finetune: Optional[Callable] = None):
 def evaluate_meta(algo, phi, clients, *, support_frac, support_size,
                   query_size, seed=0, adapt_steps=None, evaluator=None):
     """Per-client adapted accuracy over all test clients; returns
-    (mean_acc, per_client_accs). Pass a `make_meta_evaluator` result to
-    amortize compilation across calls."""
+    (acc, per_client_accs, mean_loss) with acc and mean_loss weighted by
+    each client's true query count (§4.1). Pass a `make_meta_evaluator`
+    result to amortize compilation across calls."""
     rng = np.random.RandomState(seed)
     ev = evaluator or make_meta_evaluator(algo, adapt_steps)
-    accs, losses = _batch_eval(
+    accs, losses, counts = _batch_eval(
         lambda s, q: ev(phi, s, q), clients, len(clients), support_frac,
         support_size, query_size, rng)
-    return float(accs.mean()), accs
+    acc, loss = _count_weighted(accs, losses, counts)
+    return acc, accs, loss
 
 
 def evaluate_global(eval_fn, theta, clients, *, support_frac, support_size,
                     query_size, seed=0, finetune: Optional[Callable] = None,
                     evaluator=None):
-    """FedAvg (finetune=None) / FedAvg(Meta) (finetune=trainer.finetune)."""
+    """FedAvg (finetune=None) / FedAvg(Meta) (finetune=trainer.finetune).
+    Returns (acc, per_client_accs, mean_loss), query-count-weighted like
+    `evaluate_meta`."""
     rng = np.random.RandomState(seed)
     ev = evaluator or make_global_evaluator(eval_fn, finetune)
-    accs, losses = _batch_eval(
+    accs, losses, counts = _batch_eval(
         lambda s, q: ev(theta, s, q), clients, len(clients), support_frac,
         support_size, query_size, rng)
-    return float(accs.mean()), accs
+    acc, loss = _count_weighted(accs, losses, counts)
+    return acc, accs, loss
 
 
 @dataclasses.dataclass
@@ -144,6 +160,11 @@ class FederatedTrainer:
             return self._plane.unpack(state["phi"])
         return state["phi"]
 
+    def evaluator(self):
+        """The trainer's jitted meta-evaluator — pass to `evaluate_meta`
+        to amortize compilation across eval calls."""
+        return self._evaluator
+
     def measure_flops(self, state):
         """One-off XLA cost analysis of the client procedure."""
         tb = sample_task_batch(self.train_clients, 1, self.support_frac,
@@ -170,18 +191,22 @@ class FederatedTrainer:
                 state, (jnp.asarray(tb.support_x), jnp.asarray(tb.support_y)),
                 (jnp.asarray(tb.query_x), jnp.asarray(tb.query_y)), weights)
             self.comm.tick()
+            # a record EVERY round — convergence curves at full resolution,
+            # not subsampled to eval_every; eval fields only when evaluated
+            rec = {"round": r + 1,
+                   **{k: float(v) for k, v in metrics.items()},
+                   **self.comm.summary()}
             if eval_every and eval_clients is not None and \
                     ((r + 1) % eval_every == 0 or r == rounds - 1):
-                acc, _ = evaluate_meta(
+                acc, _, loss = evaluate_meta(
                     self.algo, self.phi_tree(state), eval_clients,
                     support_frac=self.support_frac,
                     support_size=self.support_size,
                     query_size=self.query_size, seed=self.seed,
                     evaluator=self._evaluator)
-                rec = {"round": r + 1, "eval_acc": acc,
-                       **{k: float(v) for k, v in metrics.items()},
-                       **self.comm.summary()}
-                self.history.append(rec)
-                if log:
-                    log(rec)
+                rec["eval_acc"] = acc
+                rec["eval_loss"] = loss
+            self.history.append(rec)
+            if log:
+                log(rec)
         return state
