@@ -36,6 +36,18 @@ flat↔tree conversion penalty in reverse-over-reverse mode on CPU — use
 them with client_plane=False there (no automatic fallback); see
 DESIGN.md §9.
 
+The second half of the bench (``async``) times the round DRIVER, not
+just the jitted step: a full `FederatedTrainer.run` over a synthetic
+client pool with LEAF-scale local datasets, where each round's host
+half (numpy task sampling + staging) costs a real fraction of the
+device half. Variants: the PR 3 synchronous loop (prefetch_depth=0,
+per-round float() metrics readback) vs the async engine at
+prefetch_depth∈{1,2} (deferred metrics, flush at exit) vs fused-K
+(lax.scan round blocks). Headline: ``async_speedup`` — sync wall over
+the best pipelined wall, at the large scale (DESIGN.md §12). The loop
+math is bit-identical across variants (tests/test_async_engine.py), so
+this is pure overlap/dispatch win.
+
 Usage:
   PYTHONPATH=src python benchmarks/round_bench.py            # full
   PYTHONPATH=src python benchmarks/round_bench.py --dry-run  # CI smoke
@@ -45,6 +57,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import time
+
+import numpy as np
 
 from benchmarks.meta_step_bench import _analyze, _build_task, \
     _time_interleaved
@@ -59,6 +74,84 @@ SCALES = {
 }
 INNER_STEPS = 3
 CLIENTS = 16
+
+# driver-level async bench: a client pool with LEAF-scale local data so
+# host-side sampling (support/query split copies the client's full
+# local arrays) is a realistic fraction of the round — the overlap the
+# async engine exists to reclaim
+ASYNC_SCALES = {
+    "large": dict(model="large", pool=256, client_samples=8192, m=16,
+                  batch=64, rounds=16, warmup=8, fuse=8),
+    "tiny": dict(model="tiny", pool=16, client_samples=64, m=4,
+                 batch=8, rounds=4, warmup=2, fuse=2),    # --dry-run
+}
+ASYNC_VARIANTS = (
+    # PR 3 synchronous driver: inline sampling, per-round float() sync
+    ("sync", dict()),
+    ("prefetch1", dict(prefetch_depth=1, flush_every=0)),
+    ("prefetch2", dict(prefetch_depth=2, flush_every=0)),
+    # fused-K: lax.scan over K-round blocks staged as one buffer
+    ("fused", dict(prefetch_depth=2, flush_every=0)),     # + fuse_rounds
+)
+
+
+def _bench_async(scale_key: str, reps: int):
+    """Wall time per round of the full driver loop, per engine variant.
+
+    Every variant replays the identical seeded run (bit-identical
+    history — tests/test_async_engine.py), so wall deltas are pure
+    pipelining. Warmup rounds compile the per-round step and, for the
+    fused variant, the K-round scan block (`warmup` is a multiple of
+    K so the timed region never compiles)."""
+    import jax
+
+    from repro.data.federated import ClientData, TaskStream
+    from repro.federated.server import FederatedTrainer
+    from repro.optim import adam
+
+    cfg = ASYNC_SCALES[scale_key]
+    algo, model_init, *_ = _build_task(
+        SCALES[cfg["model"]], cfg["m"], cfg["batch"], algo_name="fomaml",
+        inner_steps=INNER_STEPS)
+    rng = np.random.RandomState(0)
+    D = SCALES[cfg["model"]]["in_dim"]
+    clients = [
+        ClientData(rng.normal(0, 1, (cfg["client_samples"], D))
+                   .astype(np.float32),
+                   rng.normal(0, 1, (cfg["client_samples"], D))
+                   .astype(np.float32))
+        for _ in range(cfg["pool"])]
+
+    stream = TaskStream(clients, cfg["m"], 0.5, cfg["batch"], cfg["batch"],
+                        np.random.RandomState(0))
+    t0 = time.perf_counter()
+    for _ in range(max(2, cfg["warmup"])):
+        stream.next()
+    sample_ms = (time.perf_counter() - t0) / max(2, cfg["warmup"]) * 1e3
+
+    rows = []
+    for name, knobs in ASYNC_VARIANTS:
+        if name == "fused":
+            knobs = dict(knobs, fuse_rounds=cfg["fuse"])
+        tr = FederatedTrainer(
+            algo, adam(1e-3), clients, cfg["m"], support_frac=0.5,
+            support_size=cfg["batch"], query_size=cfg["batch"], seed=0,
+            packed=True, **knobs)
+        state = tr.init(jax.random.PRNGKey(0), model_init)
+        state = tr.run(state, cfg["warmup"])
+        walls = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            state = tr.run(state, cfg["rounds"])
+            walls.append((time.perf_counter() - t0) / cfg["rounds"])
+        rows.append({"scale": scale_key, "variant": name,
+                     "wall_ms_per_round": float(np.min(walls) * 1e3),
+                     "rounds_timed": cfg["rounds"] * reps,
+                     "sample_ms": sample_ms, **knobs})
+        print(f"round.async.{scale_key}.{name},"
+              f"{rows[-1]['wall_ms_per_round'] * 1e3:.0f},"
+              f"sample_ms={sample_ms:.2f}", flush=True)
+    return rows
 
 
 def run(*, dry: bool = False, reps: int = 10, algo_name: str = "fomaml",
@@ -129,6 +222,9 @@ def run(*, dry: bool = False, reps: int = 10, algo_name: str = "fomaml",
                   f"{row['client_axis']}{chunk_tag},{wall_us:.0f},"
                   f"temp={analysis['temp_bytes']}", flush=True)
 
+    async_rows = _bench_async("tiny" if dry else "large",
+                              reps=1 if dry else 2)
+
     report = {
         "bench": "round",
         "backend": jax.default_backend(),
@@ -136,7 +232,8 @@ def run(*, dry: bool = False, reps: int = 10, algo_name: str = "fomaml",
         "dry_run": dry,
         "reps": reps,
         "rows": rows,
-        "summary": _summarize(rows),
+        "async_rows": async_rows,
+        "summary": _summarize(rows, async_rows),
     }
     with open(json_out, "w") as f:
         json.dump(report, f, indent=2)
@@ -144,7 +241,30 @@ def run(*, dry: bool = False, reps: int = 10, algo_name: str = "fomaml",
     return report
 
 
-def _summarize(rows):
+def _summarize_async(async_rows):
+    """sync driver wall vs the best pipelined variant, same seed, same
+    (bit-identical) math — the measured overlap win."""
+    sync = next((r for r in async_rows if r["variant"] == "sync"), None)
+    piped = [r for r in async_rows if r["variant"] != "sync"]
+    if not (sync and piped):
+        return {}
+    best = min(piped, key=lambda r: r["wall_ms_per_round"])
+    out = {
+        "async_speedup": sync["wall_ms_per_round"] / best["wall_ms_per_round"],
+        "async_headline": {
+            "sync_wall_ms": sync["wall_ms_per_round"],
+            "best_variant": best["variant"],
+            "best_wall_ms": best["wall_ms_per_round"],
+            "host_sample_ms": sync["sample_ms"],
+        },
+    }
+    for r in piped:
+        out[f"async_speedup_{r['variant']}"] = (
+            sync["wall_ms_per_round"] / r["wall_ms_per_round"])
+    return out
+
+
+def _summarize(rows, async_rows=()):
     out = {}
     scales = {r["scale"] for r in rows}
     big = "large" if "large" in scales else sorted(scales)[-1]
@@ -194,6 +314,7 @@ def _summarize(rows):
     if tree_v and plane:
         out["round_speedup_client_plane_vs_tree_vmap"] = (
             tree_v["wall_us_per_round"] / plane["wall_us_per_round"])
+    out.update(_summarize_async(async_rows))
     return out
 
 

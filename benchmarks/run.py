@@ -108,8 +108,10 @@ def main() -> None:
                            else "BENCH_round_smoke.json")
         report = round_bench.run(dry=not args.full, json_out=out)
         spd = report["summary"].get("round_speedup_client_plane_vs_packed")
+        aspd = report["summary"].get("async_speedup")
         print(f"round,{(time.time()-t0)*1e6:.0f},"
-              f"client_plane_speedup={f'{spd:.2f}x' if spd else 'n/a'}",
+              f"client_plane_speedup={f'{spd:.2f}x' if spd else 'n/a'},"
+              f"async_speedup={f'{aspd:.2f}x' if aspd else 'n/a'}",
               flush=True)
 
     if "experiment" in only:

@@ -35,6 +35,14 @@ def main():
     ap.add_argument("--pipeline", default="tree",
                     choices=["tree", "packed", "client_plane"])
     ap.add_argument("--client-chunk", type=int, default=0)
+    ap.add_argument("--prefetch-depth", type=int, default=0,
+                    help="async round engine: staged round blocks ahead "
+                         "of the device (0 = synchronous loop; history "
+                         "is bit-identical either way)")
+    ap.add_argument("--flush-every", type=int, default=1,
+                    help="deferred-metrics drain cadence (0 = at exit)")
+    ap.add_argument("--fuse-rounds", type=int, default=1,
+                    help="lax.scan round-block size (packed pipelines)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--outdir", default="results/experiments")
     ap.add_argument("--dry-run", action="store_true",
@@ -45,7 +53,9 @@ def main():
                 eval_every=args.eval_every, support_frac=args.support_frac,
                 local_steps=args.local_steps, target_acc=args.target_acc,
                 pipeline=args.pipeline,
-                client_chunk=args.client_chunk or None, seed=args.seed)
+                client_chunk=args.client_chunk or None, seed=args.seed,
+                prefetch_depth=args.prefetch_depth,
+                flush_every=args.flush_every, fuse_rounds=args.fuse_rounds)
     if args.clients:
         over["num_clients"] = args.clients
     if args.dry_run:

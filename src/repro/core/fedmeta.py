@@ -228,11 +228,28 @@ def make_meta_train_step(algo, optimizer, *, client_axis: str = "vmap",
 
 # ---- packed parameter plane pipeline ------------------------------------
 
-def init_packed_state(optimizer, plane: FlatPlane, phi):
-    """φ pytree -> {"phi": flat plane, "opt": flat optimizer state}."""
+def init_packed_state(optimizer, plane: FlatPlane, phi, *, staleness=None,
+                      clients_per_round=None, block_dtype=None):
+    """φ pytree -> {"phi": flat plane, "opt": flat optimizer state}.
+
+    With ``staleness`` set (async_engine.StalenessConfig), the state
+    additionally carries the in-flight straggler buffer: a
+    ``(delay, k, N)`` ring of not-yet-arrived gradient rows plus their
+    ``(delay, k)`` original aggregation weights, zero-initialized so
+    the warmup rounds aggregate fresh rows only."""
     from repro.optim.optimizers import make_flat_optimizer
     flat = plane.pack(phi)
-    return {"phi": flat, "opt": make_flat_optimizer(optimizer).init(flat)}
+    state = {"phi": flat, "opt": make_flat_optimizer(optimizer).init(flat)}
+    if staleness is not None:
+        if clients_per_round is None:
+            raise ValueError("staleness needs clients_per_round to size "
+                             "the straggler buffer")
+        k = staleness.num_stragglers(clients_per_round)
+        bd = block_dtype or jnp.float32
+        state["stale"] = {
+            "G": jnp.zeros((staleness.delay, k, plane.n_padded), bd),
+            "w": jnp.zeros((staleness.delay, k), jnp.float32)}
+    return state
 
 
 def make_packed_meta_train_step(algo, optimizer, plane: FlatPlane, *,
@@ -241,6 +258,7 @@ def make_packed_meta_train_step(algo, optimizer, plane: FlatPlane, *,
                                 impl: str | None = None,
                                 block_dtype=None,
                                 client_plane: bool = False,
+                                staleness=None,
                                 mesh=None, mesh_axis: str | None = None,
                                 jit: bool = True, donate: bool = True):
     """Meta-train step over the packed plane: state = {phi: (N,), opt}.
@@ -265,13 +283,28 @@ def make_packed_meta_train_step(algo, optimizer, plane: FlatPlane, *,
     ``mesh`` (default: the ambient mesh); each device reduces its local
     block with the packed aggregation kernel and the (N,) partials are
     psum-reduced into the meta-gradient (DESIGN.md §10).
+
+    ``staleness`` (async_engine.StalenessConfig; vmap axis only) turns
+    on staleness-aware aggregation: the step takes an extra
+    ``stale_sel=(straggler_idx, fresh_idx)`` input naming which of the
+    round's clients straggle. Straggler rows of the (m, N) gradient
+    block are detoured through the state's ``(delay, k, N)`` ring
+    buffer and replaced in the aggregation by the rows that arrive
+    this round — weighted by their original data-count weight times
+    ``discount**delay`` and renormalized over the aggregated rows.
+    Fresh and stale rows go through the SAME fused weighted-aggregate
+    kernel, so the hot path stays one flat pass (DESIGN.md §12).
     """
     from repro.optim.optimizers import make_flat_optimizer
     impl = mu_ops.resolve_impl(impl)
     flat_opt = make_flat_optimizer(optimizer, impl=impl)
     bd = block_dtype or jnp.float32
+    if staleness is not None and client_axis != "vmap":
+        raise ValueError("staleness-aware aggregation needs the full "
+                         "(m, N) gradient block before the reduce — "
+                         "client_axis='vmap' only")
 
-    def step(state, support, query, weights=None):
+    def step(state, support, query, weights=None, stale_sel=None):
         phi = plane.unpack(state["phi"])
         m = jax.tree.leaves(support)[0].shape[0]
         w = _normalize_weights(weights, m)
@@ -299,6 +332,29 @@ def make_packed_meta_train_step(algo, optimizer, plane: FlatPlane, *,
             G, mets = chunk_grads(s, q)
             return (mu_ops.weighted_aggregate(G, wc, impl=impl),
                     _weighted_metrics(wc, mets))
+
+        if staleness is not None:
+            # straggler rows detour through the delay ring; arrived rows
+            # (computed against φ from `delay` rounds ago) rejoin the
+            # aggregation block at weight w·γ^delay — still one (m, N)
+            # pass through the fused kernel
+            strag, fresh = stale_sel
+            G, mets = chunk_grads(support, query)
+            metrics = _weighted_metrics(w, mets)
+            buf = state["stale"]
+            arrived_w = buf["w"][0] * jnp.float32(
+                staleness.discount ** staleness.delay)
+            agg_G = jnp.concatenate([G[fresh], buf["G"][0]], axis=0)
+            agg_w = jnp.concatenate([w[fresh], arrived_w], axis=0)
+            meta_g = mu_ops.weighted_aggregate(
+                agg_G, agg_w / jnp.sum(agg_w), impl=impl)
+            new_stale = {
+                "G": jnp.concatenate([buf["G"][1:], G[strag][None]], axis=0),
+                "w": jnp.concatenate([buf["w"][1:], w[strag][None]], axis=0)}
+            new_flat, new_opt = flat_opt.update(state["phi"], meta_g,
+                                                state["opt"])
+            return ({"phi": new_flat, "opt": new_opt, "stale": new_stale},
+                    metrics)
 
         if client_axis == "vmap":
             meta_g, metrics = packed_chunk(support, query, w)

@@ -1,4 +1,6 @@
-from repro.data.federated import ClientData, FederatedDataset, TaskBatch, sample_task_batch
+from repro.data.federated import (ClientData, FederatedDataset, TaskBatch,
+                                  TaskStream, sample_task_batch,
+                                  stack_task_batches)
 from repro.data.synth_femnist import make_femnist
 from repro.data.synth_shakespeare import make_shakespeare
 from repro.data.synth_sent140 import make_sent140

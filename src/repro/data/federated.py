@@ -101,6 +101,38 @@ def _resample_to(x: np.ndarray, y: np.ndarray, size: int,
     return x[idx], y[idx]
 
 
+@dataclasses.dataclass
+class TaskStream:
+    """The task-sampling stream one trainer consumes: exactly one
+    `sample_task_batch` per `next()`, drawn from the trainer's seeded
+    `RandomState` with the call pattern every driver shares (one batch
+    per round). This is the object the async engine's prefetcher owns:
+    it is advanced *sequentially* — on a single background thread when
+    prefetching — so the sequence of batches is identical to the
+    synchronous loop's, which is what makes pipelined runs bit-identical
+    to synchronous ones under a fixed seed."""
+    clients: list
+    m: int
+    support_frac: float
+    support_size: int
+    query_size: int
+    rng: np.random.RandomState
+
+    def next(self) -> TaskBatch:
+        return sample_task_batch(self.clients, self.m, self.support_frac,
+                                 self.support_size, self.query_size, self.rng)
+
+    def take(self, k: int) -> list[TaskBatch]:
+        return [self.next() for _ in range(k)]
+
+
+def stack_task_batches(tbs: Sequence[TaskBatch]) -> TaskBatch:
+    """k TaskBatches -> one TaskBatch with a leading (k,) round axis on
+    every field — the stacked buffer the fused-K round mode scans over."""
+    return TaskBatch(*(np.stack([getattr(tb, f) for tb in tbs])
+                       for f in TaskBatch._fields))
+
+
 def sample_task_batch(clients: list[ClientData], m: int, support_frac: float,
                       support_size: int, query_size: int,
                       rng: np.random.RandomState) -> TaskBatch:

@@ -1,3 +1,5 @@
+from repro.federated.async_engine import (AsyncRoundEngine, Prefetcher,
+                                          StalenessConfig)
 from repro.federated.comm import CommTracker
 from repro.federated.fedavg import FedAvgTrainer
 from repro.federated.server import FederatedTrainer, evaluate_meta, evaluate_global

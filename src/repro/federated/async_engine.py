@@ -1,0 +1,252 @@
+"""Async round engine: the pipelined host↔device round loop.
+
+The synchronous driver (PR 3) pays three host↔device stalls per round:
+host-side numpy task sampling, blocking array transfers, and a
+``float(v)`` metrics readback that forces the device to drain before
+the next round can even be sampled. This engine removes all three while
+keeping the *math* of the round loop untouched (DESIGN.md §12):
+
+  * **prefetch** — a background thread owns the trainer's
+    ``TaskStream`` (data/federated.py) and stages the next
+    ``prefetch_depth`` rounds' batches onto the device with
+    ``jax.device_put`` while the current round computes. The stream is
+    advanced sequentially on that one thread, so the batch sequence —
+    and therefore the whole run — is identical to the synchronous
+    loop's under a fixed seed. ``prefetch_depth=0`` is the synchronous
+    degenerate case: no thread, batches staged inline.
+  * **deferred metrics** — per-round metrics stay unread ``jax.Array``s
+    (comm counters stay host-side round indices) in a pending list and
+    are drained to ``history`` every ``flush_every`` rounds and at
+    ``run()`` exit. No per-round ``float()`` sync; the records that
+    come out are bit-identical, just materialized later.
+  * **fused-K** — with ``fuse_rounds=K > 1`` the driver hands the step
+    K rounds' batches as one stacked ``(K, ...)`` buffer and the
+    trainer runs them in a single ``lax.scan`` over rounds (packed
+    pipeline only). Blocks are split so every eval round lands on a
+    block boundary — evaluation needs φ on the host mid-stream.
+
+Staleness-aware aggregation (``StalenessConfig``) is the engine-level
+answer to straggler clients: a configured fraction of each round's
+clients return their meta-gradient ``delay`` rounds late — computed
+against the φ they were dispatched with — and the server aggregates
+the arrived gradients with their weight discounted by ``discount**s``
+(s = rounds of staleness). The discounted weighting runs through the
+same fused packed aggregation kernel as the fresh path (DESIGN.md §3),
+so the hot path stays flat. The actual step-level wiring lives in
+``core/fedmeta.make_packed_meta_train_step``; this module owns the
+config and the per-round straggler pick.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+PREFETCH_THREAD_NAME = "repro-round-prefetch"
+
+
+@dataclasses.dataclass(frozen=True)
+class StalenessConfig:
+    """Simulated straggler clients with discount-weighted aggregation.
+
+    Each round, ``fraction`` of the sampled clients are stragglers: the
+    meta-gradient they computed against the *current* φ arrives only
+    ``delay`` rounds later, by which point φ has moved on — exactly the
+    asynchronous-FL staleness semantics. On arrival a stale gradient's
+    aggregation weight is its original data-count weight times
+    ``discount ** delay`` (weight × γ^s), and the round's effective
+    weights are renormalized over the rows actually aggregated. Fresh
+    rows have s = 0 and keep their full weight. The straggler pick per
+    round is seeded (``seed``) and independent of the task stream, so
+    enabling staleness never perturbs task sampling."""
+    delay: int = 1          # s: rounds between ModelTraining and arrival
+    fraction: float = 0.25  # fraction of each round's clients that straggle
+    discount: float = 0.5   # γ: an arrived gradient weighs w * γ^s
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.delay < 1:
+            raise ValueError("staleness delay must be >= 1")
+        if not 0.0 <= self.fraction < 1.0:
+            raise ValueError("straggler fraction must be in [0, 1)")
+
+    def num_stragglers(self, m: int) -> int:
+        """Static per-round straggler count (static shapes keep the step
+        jitted once); at least one client always stays fresh."""
+        return max(0, min(m - 1, int(round(self.fraction * m))))
+
+    def pick(self, m: int, rng: np.random.RandomState):
+        """(straggler_idx, fresh_idx) for one round — sorted int32."""
+        k = self.num_stragglers(m)
+        perm = rng.permutation(m)
+        return (np.sort(perm[:k]).astype(np.int32),
+                np.sort(perm[k:]).astype(np.int32))
+
+
+class Prefetcher:
+    """Bounded background producer of staged round inputs.
+
+    ``produce(k)`` performs the host half of a round block — sampling
+    from the task stream and ``jax.device_put``-staging the arrays —
+    and is only ever called from this one thread, in block order, so
+    seeded streams advance exactly as they would synchronously. The
+    queue holds at most ``depth`` staged blocks (double-buffered device
+    slots at depth 1). Failure on either side releases the other:
+
+      * a producer exception is re-raised in the consumer at the
+        ``get()`` for the failed block;
+      * ``close()`` (consumer exception or normal exit) sets the stop
+        flag, drains the queue so a blocked ``put`` can observe it, and
+        joins the thread — no leaked threads when a step raises.
+    """
+
+    def __init__(self, produce: Callable, sizes, depth: int):
+        self._produce = produce
+        self._sizes = list(sizes)
+        self._q: queue.Queue = queue.Queue(maxsize=max(1, depth))
+        self._stop = threading.Event()
+        self._thread = threading.Thread(
+            target=self._run, name=PREFETCH_THREAD_NAME, daemon=True)
+        self._thread.start()
+
+    def _put(self, item) -> bool:
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _run(self):
+        try:
+            for k in self._sizes:
+                if self._stop.is_set():
+                    return
+                if not self._put((None, self._produce(k))):
+                    return
+        except BaseException as exc:  # re-raised at the consumer's get()
+            self._put((exc, None))
+
+    def get(self):
+        exc, item = self._q.get()
+        if exc is not None:
+            raise exc
+        return item
+
+    def close(self):
+        self._stop.set()
+        while True:  # unblock a producer waiting on a full queue
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join(timeout=10.0)
+
+    @property
+    def alive(self) -> bool:
+        return self._thread.is_alive()
+
+
+def plan_blocks(rounds: int, eval_every: int, fuse: int) -> list:
+    """Round-block sizes covering rounds 1..``rounds``: at most ``fuse``
+    rounds per block, and a block boundary at every eval round (and the
+    final round) so evaluation always sees post-step φ on the host."""
+    fuse = max(1, fuse)
+    bounds = {rounds}
+    if eval_every:
+        bounds.update(range(eval_every, rounds + 1, eval_every))
+    blocks, r = [], 0
+    for b in sorted(bounds):
+        seg = b - r
+        while seg > 0:
+            k = min(fuse, seg)
+            blocks.append(k)
+            seg -= k
+        r = b
+    return blocks
+
+
+@dataclasses.dataclass
+class AsyncRoundEngine:
+    """The round driver shared by ``FederatedTrainer`` and
+    ``FedAvgTrainer``. The trainer supplies the task-specific pieces;
+    the engine owns pipelining, metric deferral and record cadence:
+
+      stage(k)            host+device staging of the next k rounds'
+                          inputs (called in stream order — on the
+                          prefetch thread when ``prefetch_depth > 0``)
+      step(state, staged) one jitted round; -> (state, metrics)
+      fused_step          optional: (state, stacked-(k,...) staged) ->
+                          (state, metrics with leading (k,) axis)
+      comm                CommTracker (ticked per round by the engine)
+      history             trainer's record list, appended at flush time
+    """
+    stage: Callable
+    step: Callable
+    comm: object
+    history: list
+    fused_step: Optional[Callable] = None
+    prefetch_depth: int = 0
+    flush_every: int = 1
+    fuse_rounds: int = 1
+
+    def run(self, state, rounds: int, *, eval_every: int = 0,
+            evaluate: Optional[Callable] = None, log: Callable = None):
+        fuse = self.fuse_rounds if self.fused_step is not None else 1
+        blocks = plan_blocks(rounds, eval_every if evaluate else 0, fuse)
+        pending: list = []
+
+        def flush():
+            # the only host-device sync in the loop: float() on the
+            # pending rounds' still-on-device metric arrays
+            for n, metrics, comm_rounds, eval_fields in pending:
+                rec = {"round": n,
+                       **{k: float(v) for k, v in metrics.items()},
+                       **self.comm.summary_at(comm_rounds)}
+                if eval_fields:
+                    rec.update(eval_fields)
+                self.history.append(rec)
+                if log:
+                    log(rec)
+            pending.clear()
+
+        prefetch = None
+        if self.prefetch_depth > 0:
+            prefetch = Prefetcher(self.stage, blocks, self.prefetch_depth)
+        r = 0
+        try:
+            for bk in blocks:
+                staged = prefetch.get() if prefetch else self.stage(bk)
+                if bk == 1:
+                    state, metrics = self.step(state, staged)
+                    per_round = [metrics]
+                else:
+                    state, stacked = self.fused_step(state, staged)
+                    per_round = [
+                        jax.tree.map(lambda x, i=i: x[i], stacked)
+                        for i in range(bk)]
+                for metrics in per_round:
+                    r += 1
+                    self.comm.tick()
+                    eval_fields = None
+                    if evaluate and eval_every and \
+                            (r % eval_every == 0 or r == rounds):
+                        eval_fields = evaluate(state)
+                    pending.append((r, metrics, self.comm.rounds,
+                                    eval_fields))
+                    # eval rounds already synced the device to read φ,
+                    # so draining there is free
+                    if eval_fields is not None or (
+                            self.flush_every and
+                            r % self.flush_every == 0):
+                        flush()
+            return state
+        finally:
+            if prefetch is not None:
+                prefetch.close()
+            flush()

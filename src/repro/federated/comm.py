@@ -62,14 +62,23 @@ class CommTracker:
     def total_flops(self) -> float:
         return self.rounds * self.clients_per_round * self.flops_per_client
 
-    def summary(self) -> dict:
+    def summary_at(self, rounds: int) -> dict:
+        """The cumulative summary as of round ``rounds`` — a pure
+        function of the round index, which is what lets the async
+        engine defer history materialization: a pending record only has
+        to remember its round count, not a snapshot of this tracker."""
+        snap = self if rounds == self.rounds else dataclasses.replace(
+            self, rounds=rounds)
         return {
-            "rounds": self.rounds,
-            "comm_MB": self.total_bytes / 1e6,
-            "upload_MB": self.upload_bytes / 1e6,
-            "download_MB": self.download_bytes / 1e6,
-            "client_GFLOPs": self.total_flops / 1e9,
+            "rounds": snap.rounds,
+            "comm_MB": snap.total_bytes / 1e6,
+            "upload_MB": snap.upload_bytes / 1e6,
+            "download_MB": snap.download_bytes / 1e6,
+            "client_GFLOPs": snap.total_flops / 1e9,
         }
+
+    def summary(self) -> dict:
+        return self.summary_at(self.rounds)
 
 
 def measure_client_flops(fn, *args) -> float:

@@ -129,6 +129,14 @@ class ExperimentPlan:
     sustain_evals: int = 2
     pipeline: str = "tree"               # tree | packed | client_plane
     client_chunk: Optional[int] = None
+    # async round engine (DESIGN.md §12): staged round blocks ahead of
+    # the device (0 = the synchronous loop) and the deferred-metrics
+    # flush cadence. Bit-identity of the pipelined loop means the
+    # comparison artifacts regenerate unchanged at any depth — the
+    # depth-0 invariant is pinned by test_experiment_plane.
+    prefetch_depth: int = 0
+    flush_every: int = 1
+    fuse_rounds: int = 1                 # lax.scan round blocks (packed)
     # per-method lr/step overrides, paper-Table-4 style:
     # {"fomaml": {"inner_lr": 0.05}}
     method_overrides: dict = dataclasses.field(default_factory=dict)
@@ -165,7 +173,9 @@ def make_trainer(plan: ExperimentPlan, method: str, loss_fn, eval_fn,
     common = dict(clients_per_round=plan.clients_per_round,
                   support_frac=plan.support_frac,
                   support_size=plan.support_size,
-                  query_size=plan.query_size, seed=plan.seed)
+                  query_size=plan.query_size, seed=plan.seed,
+                  prefetch_depth=plan.prefetch_depth,
+                  flush_every=plan.flush_every)
     over = plan.method_overrides.get(method, {})
     if method in FEDAVG_METHODS:
         return FedAvgTrainer(
@@ -184,7 +194,8 @@ def make_trainer(plan: ExperimentPlan, method: str, loss_fn, eval_fn,
         algo, adam(over.get("outer_lr", plan.outer_lr)), train_clients,
         client_axis="chunked" if plan.client_chunk else "vmap",
         client_chunk=plan.client_chunk, packed=packed,
-        client_plane=(plan.pipeline == "client_plane"), **common)
+        client_plane=(plan.pipeline == "client_plane"),
+        fuse_rounds=plan.fuse_rounds if packed else 1, **common)
 
 
 def _eval_records(history: list) -> list:

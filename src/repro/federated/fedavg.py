@@ -28,9 +28,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fedmeta import (_normalize_weights, _scan_chunks,
+from repro.core.fedmeta import (_maybe_jit, _normalize_weights, _scan_chunks,
                                 _weighted_metrics)
-from repro.data.federated import sample_task_batch
+from repro.data.federated import TaskStream, sample_task_batch
+from repro.federated.async_engine import AsyncRoundEngine
 from repro.federated.comm import CommTracker, measure_client_flops
 from repro.optim import adam, sgd
 from repro.utils.pytree import tree_add, tree_zeros_like
@@ -56,6 +57,9 @@ class FedAvgTrainer:
     finetune_batch_size: Optional[int] = None  # None = full support size
     meta_eval: bool = False         # FedAvg(Meta) scoring at eval time
     seed: int = 0
+    # ---- async round engine (DESIGN.md §12) -------------------------
+    prefetch_depth: int = 0         # staged rounds ahead; 0 = sync loop
+    flush_every: int = 1            # drain deferred metrics every k rounds
 
     def __post_init__(self):
         if self.meta_eval and self.name == "fedavg":
@@ -176,7 +180,8 @@ class FedAvgTrainer:
                                          w)
             return {"theta": theta}, metrics
 
-        return jax.jit(step)
+        # donate θ across rounds (no-op on CPU, where XLA lacks donation)
+        return _maybe_jit(step, True, True)
 
     def _local_batches(self, tb):
         """Per-round local training minibatches from the sampled clients'
@@ -206,39 +211,49 @@ class FedAvgTrainer:
 
     def run(self, state, rounds: int, eval_every: int = 0,
             eval_clients=None, log: Callable = None):
-        """Driver loop at parity with FederatedTrainer.run: per-round
-        comm ticks and history records, periodic evaluation on held-out
-        clients (FedAvg(Meta) fine-tunes when ``meta_eval=True``)."""
+        """Driver loop at parity with FederatedTrainer.run, on the same
+        async round engine (DESIGN.md §12): task sampling AND the local
+        minibatch build run on the prefetch thread (both seeded streams
+        advance sequentially there, preserving the synchronous order),
+        arrays are staged with device_put instead of per-round
+        jnp.asarray re-transfers, and the per-round float() metrics
+        readback is deferred to the flush points. prefetch_depth=0 /
+        flush_every=1 is exactly the synchronous loop; periodic
+        evaluation on held-out clients (FedAvg(Meta) fine-tunes when
+        ``meta_eval=True``) is unchanged."""
         from repro.federated.server import evaluate_global
         if self._step is None:
             self._step = self._make_step()
         evaluator = self.evaluator()
-        for r in range(rounds):
-            tb = sample_task_batch(self.train_clients, self.clients_per_round,
-                                   self.support_frac, self.support_size,
-                                   self.query_size, self._rng)
+        stream = TaskStream(self.train_clients, self.clients_per_round,
+                            self.support_frac, self.support_size,
+                            self.query_size, self._rng)
+        dp = jax.device_put
+
+        def stage(k):
+            assert k == 1, "FedAvg has no fused-K mode"
+            tb = stream.next()
             (bx, by), (px, py) = self._local_batches(tb)
-            m = len(tb.weight)
             w = _normalize_weights(
-                jnp.asarray(tb.weight) if self.weighted else None, m)
-            state, metrics = self._step(
-                state, (jnp.asarray(bx), jnp.asarray(by)),
-                (jnp.asarray(px), jnp.asarray(py)), w)
-            self.comm.tick()
-            rec = {"round": r + 1,
-                   **{k: float(v) for k, v in metrics.items()},
-                   **self.comm.summary()}
-            if eval_every and eval_clients is not None and \
-                    ((r + 1) % eval_every == 0 or r == rounds - 1):
+                jnp.asarray(tb.weight) if self.weighted else None,
+                len(tb.weight))
+            return ((dp(bx), dp(by)), (dp(px), dp(py)), w)
+
+        evaluate = None
+        if eval_every and eval_clients is not None:
+            def evaluate(st):
                 acc, _, loss = evaluate_global(
-                    self.eval_fn, state["theta"], eval_clients,
+                    self.eval_fn, st["theta"], eval_clients,
                     support_frac=self.support_frac,
                     support_size=self.support_size,
                     query_size=self.query_size, seed=self.seed,
                     evaluator=evaluator)
-                rec["eval_acc"] = acc
-                rec["eval_loss"] = loss
-            self.history.append(rec)
-            if log:
-                log(rec)
-        return state
+                return {"eval_acc": acc, "eval_loss": loss}
+
+        engine = AsyncRoundEngine(
+            stage=stage, step=lambda st, a: self._step(st, *a),
+            comm=self.comm, history=self.history,
+            prefetch_depth=self.prefetch_depth,
+            flush_every=self.flush_every)
+        return engine.run(state, rounds, eval_every=eval_every,
+                          evaluate=evaluate, log=log)

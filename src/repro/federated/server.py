@@ -8,16 +8,18 @@ FedAvg(Meta)) or not (FedAvg) and is scored on its query set.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fedmeta import (init_packed_state, make_meta_train_step,
+from repro.core.fedmeta import (_maybe_jit, init_packed_state,
+                                make_meta_train_step,
                                 make_packed_meta_train_step)
-from repro.data.federated import sample_task_batch
+from repro.data.federated import (TaskStream, sample_task_batch,
+                                  stack_task_batches)
+from repro.federated.async_engine import AsyncRoundEngine, StalenessConfig
 from repro.federated.comm import CommTracker, measure_client_flops
 from repro.optim import Optimizer
 from repro.utils.flat import plane_for
@@ -119,18 +121,38 @@ class FederatedTrainer:
     client_plane: bool = False  # fused flat inner loop (packed only)
     mesh: Optional[object] = None  # for client_axis="sharded" (None =
     mesh_axis: Optional[str] = None  # ambient mesh, first axis)
+    # ---- async round engine (DESIGN.md §12) -------------------------
+    prefetch_depth: int = 0     # staged round blocks ahead; 0 = sync loop
+    flush_every: int = 1        # drain deferred metrics every k rounds
+                                # (0 = only at eval rounds / run() exit)
+    fuse_rounds: int = 1        # lax.scan-over-rounds block size (packed)
+    staleness: Optional[StalenessConfig] = None  # packed + vmap axis only
 
     def __post_init__(self):
         if self.client_plane and not self.packed:
             raise ValueError("client_plane=True requires packed=True")
+        if self.fuse_rounds > 1 and not self.packed:
+            raise ValueError("fuse_rounds>1 (fused-K round blocks) is a "
+                             "packed-pipeline mode")
+        if self.staleness is not None:
+            if not self.packed or self.client_axis != "vmap":
+                raise ValueError("staleness-aware aggregation requires "
+                                 "packed=True and client_axis='vmap'")
+            if self.fuse_rounds > 1:
+                raise ValueError("staleness and fuse_rounds>1 are mutually "
+                                 "exclusive (stragglers need per-round "
+                                 "straggler picks)")
         # the packed step needs φ's FlatPlane, built in init(); the tree
         # step has no such dependency and is built eagerly
         self._step = None if self.packed else make_meta_train_step(
             self.algo, self.optimizer, client_axis=self.client_axis,
             client_chunk=self.client_chunk, mesh=self.mesh,
             mesh_axis=self.mesh_axis)
+        self._fused = None
         self._plane = None
         self._rng = np.random.RandomState(self.seed)
+        self._stale_rng = (np.random.RandomState(self.staleness.seed)
+                           if self.staleness is not None else None)
         self._evaluator = make_meta_evaluator(self.algo)
         self.comm: Optional[CommTracker] = None
         self.history: list = []
@@ -139,14 +161,33 @@ class FederatedTrainer:
         phi = self.algo.init_state(key, model_init)
         if self.packed:
             self._plane = plane_for(phi)
+            kw = dict(client_axis=self.client_axis,
+                      client_chunk=self.client_chunk, impl=self.impl,
+                      block_dtype=self.block_dtype,
+                      client_plane=self.client_plane,
+                      staleness=self.staleness, mesh=self.mesh,
+                      mesh_axis=self.mesh_axis)
             self._step = make_packed_meta_train_step(
-                self.algo, self.optimizer, self._plane,
-                client_axis=self.client_axis,
-                client_chunk=self.client_chunk, impl=self.impl,
-                block_dtype=self.block_dtype,
-                client_plane=self.client_plane, mesh=self.mesh,
-                mesh_axis=self.mesh_axis)
-            state = init_packed_state(self.optimizer, self._plane, phi)
+                self.algo, self.optimizer, self._plane, **kw)
+            if self.fuse_rounds > 1:
+                # scan-over-rounds on the SAME (unjitted) step body the
+                # per-round path compiles — fused-K blocks must be
+                # bit-identical to K per-round steps
+                body = make_packed_meta_train_step(
+                    self.algo, self.optimizer, self._plane, jit=False,
+                    donate=False, **kw)
+
+                def fused(state, staged):
+                    def one(st, inp):
+                        sup, qry, w = inp
+                        return body(st, sup, qry, w)
+                    return jax.lax.scan(one, state, staged)
+
+                self._fused = _maybe_jit(fused, True, True)
+            state = init_packed_state(
+                self.optimizer, self._plane, phi, staleness=self.staleness,
+                clients_per_round=self.clients_per_round,
+                block_dtype=self.block_dtype)
         else:
             state = {"phi": phi, "opt": self.optimizer.init(phi)}
         self.comm = CommTracker.for_state(
@@ -182,31 +223,49 @@ class FederatedTrainer:
 
     def run(self, state, rounds: int, eval_every: int = 0,
             eval_clients=None, log: Callable = None):
-        for r in range(rounds):
-            tb = sample_task_batch(self.train_clients, self.clients_per_round,
-                                   self.support_frac, self.support_size,
-                                   self.query_size, self._rng)
-            weights = jnp.asarray(tb.weight) if self.weighted else None
-            state, metrics = self._step(
-                state, (jnp.asarray(tb.support_x), jnp.asarray(tb.support_y)),
-                (jnp.asarray(tb.query_x), jnp.asarray(tb.query_y)), weights)
-            self.comm.tick()
-            # a record EVERY round — convergence curves at full resolution,
-            # not subsampled to eval_every; eval fields only when evaluated
-            rec = {"round": r + 1,
-                   **{k: float(v) for k, v in metrics.items()},
-                   **self.comm.summary()}
-            if eval_every and eval_clients is not None and \
-                    ((r + 1) % eval_every == 0 or r == rounds - 1):
+        """Drive ``rounds`` rounds through the async round engine
+        (DESIGN.md §12). The default knobs (prefetch_depth=0,
+        flush_every=1, fuse_rounds=1) reproduce the synchronous loop
+        exactly; with staleness off, every pipelined configuration
+        yields bit-identical history under the same seed. A record is
+        appended EVERY round — convergence curves at full resolution,
+        not subsampled to eval_every; eval fields only when evaluated."""
+        stream = TaskStream(self.train_clients, self.clients_per_round,
+                            self.support_frac, self.support_size,
+                            self.query_size, self._rng)
+        dp = jax.device_put
+
+        def stage(k):
+            if k > 1:   # fused-K: one stacked (k, m, ...) staged buffer
+                tb = stack_task_batches(stream.take(k))
+                return ((dp(tb.support_x), dp(tb.support_y)),
+                        (dp(tb.query_x), dp(tb.query_y)),
+                        dp(tb.weight) if self.weighted else None)
+            tb = stream.next()
+            args = ((dp(tb.support_x), dp(tb.support_y)),
+                    (dp(tb.query_x), dp(tb.query_y)),
+                    dp(tb.weight) if self.weighted else None)
+            if self.staleness is not None:
+                strag, fresh = self.staleness.pick(
+                    self.clients_per_round, self._stale_rng)
+                args += ((dp(strag), dp(fresh)),)
+            return args
+
+        evaluate = None
+        if eval_every and eval_clients is not None:
+            def evaluate(st):
                 acc, _, loss = evaluate_meta(
-                    self.algo, self.phi_tree(state), eval_clients,
+                    self.algo, self.phi_tree(st), eval_clients,
                     support_frac=self.support_frac,
                     support_size=self.support_size,
                     query_size=self.query_size, seed=self.seed,
                     evaluator=self._evaluator)
-                rec["eval_acc"] = acc
-                rec["eval_loss"] = loss
-            self.history.append(rec)
-            if log:
-                log(rec)
-        return state
+                return {"eval_acc": acc, "eval_loss": loss}
+
+        engine = AsyncRoundEngine(
+            stage=stage, step=lambda st, a: self._step(st, *a),
+            comm=self.comm, history=self.history, fused_step=self._fused,
+            prefetch_depth=self.prefetch_depth,
+            flush_every=self.flush_every, fuse_rounds=self.fuse_rounds)
+        return engine.run(state, rounds, eval_every=eval_every,
+                          evaluate=evaluate, log=log)

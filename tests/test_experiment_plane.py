@@ -301,8 +301,10 @@ def test_shared_sampling_stream_parity(monkeypatch):
     """The experiment plane's core invariant: FederatedTrainer and
     FedAvgTrainer under the same seed consume IDENTICAL task-sampling
     streams — same clients, same support/query splits, every round.
-    Guards the duplicated driver loops against one side ever adding an
-    extra RandomState draw."""
+    Both run() loops draw through the shared TaskStream
+    (data.federated), so that call site is patched for the round draws;
+    measure_flops still draws directly from each trainer module."""
+    import repro.data.federated as dfed
     import repro.federated.fedavg as fav
     import repro.federated.server as srv
     from repro.data.federated import sample_task_batch as real
@@ -324,6 +326,7 @@ def test_shared_sampling_stream_parity(monkeypatch):
                   query_size=8, seed=7)
 
     monkeypatch.setattr(srv, "sample_task_batch", recorder("meta"))
+    monkeypatch.setattr(dfed, "sample_task_batch", recorder("meta"))
     algo = make_algorithm("fomaml", loss_fn, eval_fn, inner_lr=0.05)
     tr = FederatedTrainer(algo, adam(0.01), ds.clients, **common)
     st = tr.init(jax.random.PRNGKey(0), _TinyModel.init)
@@ -331,6 +334,7 @@ def test_shared_sampling_stream_parity(monkeypatch):
     tr.run(st, 3)
 
     monkeypatch.setattr(fav, "sample_task_batch", recorder("avg"))
+    monkeypatch.setattr(dfed, "sample_task_batch", recorder("avg"))
     fa = FedAvgTrainer(loss_fn, eval_fn, local_lr=0.05,
                        train_clients=ds.clients, **common)
     st = fa.init(jax.random.PRNGKey(0), _TinyModel.init)
@@ -372,3 +376,58 @@ def test_run_comparison_smoke(tmp_path):
     fm = loaded["methods"]["fomaml"]["comm"]
     assert fa["rounds"] == fm["rounds"] == 3
     assert fa["download_MB"] == pytest.approx(fm["download_MB"])
+
+
+# ---- async round engine through the plane (DESIGN.md §12) ----------------
+
+def _tiny_plan(**overrides):
+    base = dict(
+        dataset="tiny", methods=("fedavg", "fomaml"), rounds=4,
+        eval_every=2, num_clients=12, clients_per_round=4,
+        support_frac=0.5, support_size=8, query_size=8, inner_lr=0.1,
+        outer_lr=0.05, local_lr=0.05, local_steps=2, pipeline="packed",
+        data_fn=lambda n, s: _tiny_dataset(num_clients=n, seed=s),
+        model_fn=lambda: _TinyModel)
+    base.update(overrides)
+    return ExperimentPlan(**base)
+
+
+def test_comparison_pipelined_bit_identical():
+    """run_comparison on the pipelined path (prefetch + deferred
+    metrics + fused-K) must reproduce the depth-0 comparison record —
+    histories AND comm-to-target table — bit for bit."""
+    sync = run_comparison(_tiny_plan(), save=False)
+    piped = run_comparison(
+        _tiny_plan(prefetch_depth=2, flush_every=4, fuse_rounds=2),
+        save=False)
+    for m in ("fedavg", "fomaml"):
+        assert piped["methods"][m]["history"] == sync["methods"][m]["history"]
+        assert piped["methods"][m]["comm"] == sync["methods"][m]["comm"]
+    assert piped["comm_to_target"] == sync["comm_to_target"]
+    assert piped["target_acc"] == sync["target_acc"]
+    assert piped["plan"]["prefetch_depth"] == 2   # knob is serialized
+
+
+def test_committed_artifacts_comm_to_target_stable():
+    """The committed comparison artifacts pin the depth-0 behavior:
+    recomputing every comm-to-target row from the stored histories must
+    reproduce the stored table exactly — the engine refactor may not
+    shift what the experiment plane would emit."""
+    art_dir = os.path.join(os.path.dirname(__file__), "..",
+                           "results", "experiments")
+    paths = [os.path.join(art_dir, f) for f in sorted(os.listdir(art_dir))
+             if f.endswith(".json")]
+    assert paths, "committed experiment artifacts are missing"
+    for path in paths:
+        with open(path) as f:
+            rec = json.load(f)
+        sustain = rec["plan"]["sustain_evals"]
+        for m, row in rec["comm_to_target"].items():
+            got = comm_to_target(rec["methods"][m]["history"],
+                                 rec["target_acc"], sustain=sustain)
+            if row is None:
+                assert got is None, (path, m)
+            else:
+                pinned = {k: v for k, v in row.items()
+                          if not k.startswith("comm_reduction")}
+                assert got == pinned, (path, m)
