@@ -27,7 +27,8 @@ def main():
     ap.add_argument("--eval-every", type=int, default=5)
     ap.add_argument("--clients", type=int, default=0,
                     help="override registry client-pool size")
-    ap.add_argument("--support-frac", type=float, default=0.2)
+    ap.add_argument("--support-frac", type=float, default=None,
+                    help="override the per-dataset registry default")
     ap.add_argument("--local-steps", type=int, default=3)
     ap.add_argument("--target-acc", type=float, default=None,
                     help="fixed target accuracy (default: highest "
@@ -50,7 +51,7 @@ def main():
     args = ap.parse_args()
 
     over = dict(methods=tuple(args.methods.split(",")), rounds=args.rounds,
-                eval_every=args.eval_every, support_frac=args.support_frac,
+                eval_every=args.eval_every,
                 local_steps=args.local_steps, target_acc=args.target_acc,
                 pipeline=args.pipeline,
                 client_chunk=args.client_chunk or None, seed=args.seed,
@@ -58,11 +59,20 @@ def main():
                 flush_every=args.flush_every, fuse_rounds=args.fuse_rounds)
     if args.clients:
         over["num_clients"] = args.clients
+    if args.support_frac is not None:
+        over["support_frac"] = args.support_frac
     if args.dry_run:
+        # smoke names + smoke outdir (unless overridden): a dry run must
+        # not overwrite the committed full-run artifacts under
+        # results/experiments/
         over.update(rounds=4, eval_every=2, num_clients=24)
+        if args.outdir == "results/experiments":
+            args.outdir = "results/experiments-smoke"
 
     for dataset in args.datasets.split(","):
-        plan = default_plan(dataset, **over)
+        plan = default_plan(
+            dataset, **over,
+            **({"name": f"{dataset}_smoke"} if args.dry_run else {}))
         out = run_comparison(plan, out_dir=args.outdir, log=print)
         print(f"\n=== {dataset} (pipeline={plan.pipeline}, "
               f"rounds={plan.rounds}) ===")

@@ -2,5 +2,5 @@
 from repro.core.algorithms import (MAML, FOMAML, MetaSGD, Reptile,
                                    MetaAlgorithm, make_algorithm)
 from repro.core.fedmeta import federated_meta_step, make_meta_train_step
-from repro.core.losses import (classification_loss, lm_loss, softmax_xent,
-                               accuracy, topk_accuracy)
+from repro.core.losses import (classification_loss, lm_loss, lm_pair_loss,
+                               softmax_xent, accuracy, topk_accuracy)

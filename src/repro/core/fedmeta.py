@@ -236,7 +236,9 @@ def init_packed_state(optimizer, plane: FlatPlane, phi, *, staleness=None,
     additionally carries the in-flight straggler buffer: a
     ``(delay, k, N)`` ring of not-yet-arrived gradient rows plus their
     ``(delay, k)`` original aggregation weights, zero-initialized so
-    the warmup rounds aggregate fresh rows only."""
+    the warmup rounds aggregate fresh rows only. With ``jitter`` on, the
+    ring rows additionally carry their remaining-rounds counter ``c``
+    and original drawn delay ``d`` (per-row γ^d on arrival)."""
     from repro.optim.optimizers import make_flat_optimizer
     flat = plane.pack(phi)
     state = {"phi": flat, "opt": make_flat_optimizer(optimizer).init(flat)}
@@ -249,6 +251,9 @@ def init_packed_state(optimizer, plane: FlatPlane, phi, *, staleness=None,
         state["stale"] = {
             "G": jnp.zeros((staleness.delay, k, plane.n_padded), bd),
             "w": jnp.zeros((staleness.delay, k), jnp.float32)}
+        if staleness.jitter:
+            state["stale"]["c"] = jnp.zeros((staleness.delay, k), jnp.int32)
+            state["stale"]["d"] = jnp.zeros((staleness.delay, k), jnp.int32)
     return state
 
 
@@ -332,6 +337,47 @@ def make_packed_meta_train_step(algo, optimizer, plane: FlatPlane, *,
             G, mets = chunk_grads(s, q)
             return (mu_ops.weighted_aggregate(G, wc, impl=impl),
                     _weighted_metrics(wc, mets))
+
+        if staleness is not None and staleness.jitter:
+            # jittered stragglers: each ring row carries its own drawn
+            # delay d ∈ [0, delay] and a remaining-rounds counter c; a
+            # row rejoins the aggregation the round its counter hits 0
+            # at weight w·γ^d (d = its ACTUAL staleness), then its
+            # weight zeroes so it cannot arrive twice before falling
+            # off the ring. d = 0 stragglers join their own round like
+            # fresh rows (γ^0 = 1). The aggregation block is the m
+            # current rows plus ALL delay·k ring rows — still static
+            # shapes, still one pass through the fused kernel.
+            strag, fresh, delays = stale_sel
+            G, mets = chunk_grads(support, query)
+            metrics = _weighted_metrics(w, mets)
+            buf = state["stale"]
+            c = buf["c"] - 1
+            arrive = (c <= 0) & (buf["w"] > 0)
+            gamma_d = jnp.float32(staleness.discount) ** \
+                buf["d"].astype(jnp.float32)
+            arrived_w = jnp.where(arrive, buf["w"] * gamma_d, 0.0)
+            dk = buf["G"].shape[0] * buf["G"].shape[1]
+            agg_G = jnp.concatenate(
+                [G[fresh], G[strag],
+                 buf["G"].reshape(dk, buf["G"].shape[2])], axis=0)
+            agg_w = jnp.concatenate(
+                [w[fresh], jnp.where(delays == 0, w[strag], 0.0),
+                 arrived_w.reshape(dk)], axis=0)
+            meta_g = mu_ops.weighted_aggregate(
+                agg_G, agg_w / jnp.sum(agg_w), impl=impl)
+            kept_w = jnp.where(arrive, 0.0, buf["w"])
+            new_stale = {
+                "G": jnp.concatenate([buf["G"][1:], G[strag][None]], axis=0),
+                "w": jnp.concatenate(
+                    [kept_w[1:],
+                     jnp.where(delays > 0, w[strag], 0.0)[None]], axis=0),
+                "c": jnp.concatenate([c[1:], delays[None]], axis=0),
+                "d": jnp.concatenate([buf["d"][1:], delays[None]], axis=0)}
+            new_flat, new_opt = flat_opt.update(state["phi"], meta_g,
+                                                state["opt"])
+            return ({"phi": new_flat, "opt": new_opt, "stale": new_stale},
+                    metrics)
 
         if staleness is not None:
             # straggler rows detour through the delay ring; arrived rows

@@ -22,8 +22,17 @@ def topk_accuracy(logits, labels, k: int):
     return jnp.mean(hit.astype(jnp.float32))
 
 
-def classification_loss(apply_fn):
-    """-> loss_fn(params, (x, y)) and eval_fn(params, (x, y))->(loss, metrics)."""
+def classification_loss(apply_fn, topk=()):
+    """-> loss_fn(params, (x, y)) and eval_fn(params, (x, y))->(loss, metrics).
+
+    ``topk`` adds ``top{k}`` accuracy metrics (paper §4.3 reports Top-1 and
+    Top-4 on the production recommendation task). This builder also serves
+    the *local-head* convention of that scenario: labels may be client-local
+    ids (``data/synth_recommend.localize_clients``) over a small head
+    instead of global service ids over the full catalogue — the loss/eval
+    math is unchanged, only the label space (and therefore the model's
+    output width, the θ-size asymmetry of DESIGN.md §13) differs.
+    """
 
     def loss_fn(params, batch):
         x, y = batch
@@ -32,7 +41,10 @@ def classification_loss(apply_fn):
     def eval_fn(params, batch):
         x, y = batch
         logits = apply_fn(params, x)
-        return softmax_xent(logits, y), {"accuracy": accuracy(logits, y)}
+        metrics = {"accuracy": accuracy(logits, y)}
+        for k in topk:
+            metrics[f"top{k}"] = topk_accuracy(logits, y, k)
+        return softmax_xent(logits, y), metrics
 
     return loss_fn, eval_fn
 
@@ -63,5 +75,29 @@ def lm_loss(apply_fn):
         loss = softmax_xent(logits[:, :-1], tokens[:, 1:])
         return loss + aux, {"accuracy": accuracy(logits[:, :-1], tokens[:, 1:]),
                             "nll": loss}
+
+    return loss_fn, eval_fn
+
+
+def lm_pair_loss(apply_fn):
+    """`lm_loss` behind the federated (x, y) batch convention.
+
+    The experiment plane's task pipeline (`data/federated.py`) hands every
+    loss a ``(x, y)`` pair; for LM personalization tasks x IS the (B, L)
+    token batch and the target is the shifted sequence itself, so y is
+    ignored. This is the adapter that lets per-client dialect corpora
+    (`data/lm_tasks.make_lm_clients`) run through `run_comparison`
+    unchanged — FedMeta adapts on support sequences, scores next-token
+    accuracy on query sequences.
+    """
+    base_loss, base_eval = lm_loss(apply_fn)
+
+    def loss_fn(params, batch):
+        x, _ = batch
+        return base_loss(params, x)
+
+    def eval_fn(params, batch):
+        x, _ = batch
+        return base_eval(params, x)
 
     return loss_fn, eval_fn

@@ -4,4 +4,6 @@ from repro.data.federated import (ClientData, FederatedDataset, TaskBatch,
 from repro.data.synth_femnist import make_femnist
 from repro.data.synth_shakespeare import make_shakespeare
 from repro.data.synth_sent140 import make_sent140
-from repro.data.synth_recommend import make_recommend
+from repro.data.synth_recommend import (localize_clients, localize_recommend,
+                                        make_recommend)
+from repro.data.lm_tasks import make_lm_clients, make_lm_task_batch

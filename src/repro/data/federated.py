@@ -64,6 +64,29 @@ class FederatedDataset:
         test = [self.clients[i] for i in idx[n_train + n_val:]]
         return train, val, test
 
+    def view(self, transform, num_classes: int | None = None,
+             name: str | None = None) -> "FederatedDataset":
+        """A per-client re-labelled/re-featured view of the same dataset.
+
+        ``transform(client) -> ClientData`` runs independently on every
+        client and MUST preserve client order and per-client example
+        counts ``n``. Under that contract a view consumes *identical*
+        seeded sampling streams to the original (`sample_task_batch`
+        draws depend only on client count and per-client ``n``), which is
+        what lets the scenario plane (DESIGN.md §13) run FedMeta on a
+        local-label view and FedAvg on the global view of one dataset
+        while keeping the shared-stream discipline of DESIGN.md §11.
+        """
+        clients = []
+        for c in self.clients:
+            t = transform(c)
+            if t.n != c.n:
+                raise ValueError("view transform must preserve client "
+                                 f"sizes (got {t.n}, want {c.n})")
+            clients.append(t)
+        return FederatedDataset(clients, num_classes or self.num_classes,
+                                name=name or self.name)
+
     def stats(self) -> dict:
         ns = np.array([c.n for c in self.clients])
         classes = np.array([len(np.unique(c.y)) for c in self.clients])

@@ -6,8 +6,17 @@ client-specific permutation applied to a slice of the vocabulary plus a
 client-specific topic mixture. The meta-learner trains an initialization
 that adapts to a new client's dialect in a few inner steps.
 
-Used by the end-to-end LM examples and smoke tests; the dry-run uses
-ShapeDtypeStructs from configs.shapes instead (no allocation).
+Two entry points:
+  * `make_lm_task_batch` — a fixed-shape `LMTaskBatch` for the direct
+    LM examples / smoke tests (the dry-run uses ShapeDtypeStructs from
+    configs.shapes instead — no allocation);
+  * `make_lm_clients` — the same dialect generator behind the
+    `FederatedDataset` / `TaskStream` interface, so LM personalization
+    runs through the scenario plane's `run_comparison` like any other
+    workload (DESIGN.md §13): each client's corpus is its local data,
+    support/query splits and seeded sampling come from
+    `data/federated.py`, and `core/losses.lm_pair_loss` adapts the
+    next-token objective to the (x, y) task convention.
 """
 from __future__ import annotations
 
@@ -48,3 +57,35 @@ def make_lm_task_batch(num_clients: int, support_seqs: int, query_seqs: int,
         for i in range(query_seqs):
             qry[c, i] = perm[_sample_stream(rng, seq_len, vocab)]
     return LMTaskBatch(sup, qry)
+
+
+def _dialect_perm(rng, vocab):
+    """A client dialect: permutation of a random slice of the vocab."""
+    perm = np.arange(vocab)
+    sl = rng.choice(vocab, size=max(2, vocab // 8), replace=False)
+    perm[sl] = rng.permutation(sl)
+    return perm
+
+
+def make_lm_clients(num_clients: int = 32, mean_seqs: int = 24,
+                    seq_len: int = 16, vocab: int = 64, seed: int = 0):
+    """Per-client dialect corpora as a `FederatedDataset`.
+
+    Each client holds ``n`` token sequences of its own dialect as local
+    data: ``x`` is the (n, seq_len) int32 token matrix, ``y`` is the
+    final token of each sequence (a stand-in label — `lm_pair_loss`
+    trains on the shifted sequence itself and never reads y, but the
+    federated batch plumbing carries (x, y) pairs). ``n`` varies per
+    client in [mean_seqs, 2*mean_seqs) so data-count weighting and true
+    query counts are exercised like every other dataset.
+    """
+    from repro.data.federated import ClientData, FederatedDataset
+    rng = np.random.RandomState(seed)
+    clients = []
+    for _ in range(num_clients):
+        perm = _dialect_perm(rng, vocab)
+        n = mean_seqs + rng.randint(mean_seqs)
+        seqs = np.stack([perm[_sample_stream(rng, seq_len, vocab)]
+                         for _ in range(n)]).astype(np.int32)
+        clients.append(ClientData(seqs, seqs[:, -1].copy()))
+    return FederatedDataset(clients, vocab, name="synth-lm-dialects")

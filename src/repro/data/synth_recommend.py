@@ -58,3 +58,43 @@ def make_recommend(num_clients: int = 200, num_services: int = 120,
         x[np.arange(n), ctx_dim + lasts] = 1.0
         clients.append(ClientData(x, ys.astype(np.int32)))
     return FederatedDataset(clients, num_services, name="synth-recommend")
+
+
+def _localize_one(c: ClientData, head_size: int) -> ClientData:
+    """One client's labels remapped to local ids 0..k-1 (rank of the
+    service in the client's sorted service set); features untouched."""
+    services = np.unique(c.y)
+    if len(services) > head_size:
+        raise ValueError(f"client uses {len(services)} services > "
+                         f"head_size {head_size}")
+    lut = np.full(int(c.y.max()) + 1, -1, c.y.dtype)
+    lut[services] = np.arange(len(services), dtype=c.y.dtype)
+    return ClientData(c.x, lut[c.y])
+
+
+def localize_clients(clients, head_size: int = 40):
+    """Global service labels -> per-client local-head labels (paper §4.3).
+
+    The paper's FedMeta recommender trains a ~40-way classifier over THE
+    CLIENT'S OWN services instead of FedAvg's 2420-way classifier over the
+    global catalogue — the model-size asymmetry behind its Table-3 bytes
+    advantage. This produces that local view: each client's labels are
+    remapped to local ids ``0..k-1`` (a mapping the client can build
+    offline from its own history), so a ``head_size``-way model covers
+    every client.
+
+    Client order, features, and example counts are preserved, keeping
+    seeded sampling streams identical to the global view (the §11 shared-
+    stream discipline). Raises if any client uses more than ``head_size``
+    services.
+    """
+    return [_localize_one(c, head_size) for c in clients]
+
+
+def localize_recommend(ds: FederatedDataset,
+                       head_size: int = 40) -> FederatedDataset:
+    """`localize_clients` as a whole-dataset view (num_classes becomes
+    the head size), through `FederatedDataset.view`'s order/size
+    contract check."""
+    return ds.view(lambda c: _localize_one(c, head_size),
+                   num_classes=head_size, name=ds.name + "-local")

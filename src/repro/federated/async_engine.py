@@ -58,14 +58,30 @@ class StalenessConfig:
     ``delay`` rounds later, by which point φ has moved on — exactly the
     asynchronous-FL staleness semantics. On arrival a stale gradient's
     aggregation weight is its original data-count weight times
-    ``discount ** delay`` (weight × γ^s), and the round's effective
-    weights are renormalized over the rows actually aggregated. Fresh
-    rows have s = 0 and keep their full weight. The straggler pick per
-    round is seeded (``seed``) and independent of the task stream, so
-    enabling staleness never perturbs task sampling."""
-    delay: int = 1          # s: rounds between ModelTraining and arrival
+    ``discount ** s`` (weight × γ^s, s = its actual rounds of
+    staleness), and the round's effective weights are renormalized over
+    the rows actually aggregated. Fresh rows have s = 0 and keep their
+    full weight. The straggler pick per round is seeded (``seed``) and
+    independent of the task stream, so enabling staleness never perturbs
+    task sampling.
+
+    ``jitter=True`` models heterogeneous stragglers: instead of every
+    straggler arriving exactly ``delay`` rounds late, each straggler
+    independently draws a per-round seeded delay s ∈ [0, delay] (0 =
+    arrives within the round, i.e. effectively fresh) and rejoins after
+    s rounds at weight w·γ^s. ``jitter=False`` is bitwise-identical to
+    the fixed-delay behavior — the fixed path's code is untouched and
+    the rng draws the same values (tests pin this).
+
+    >>> cfg = StalenessConfig(delay=2, fraction=0.25, jitter=True)
+    >>> strag, fresh, delays = cfg.pick(4, np.random.RandomState(0))
+    >>> delays.shape == strag.shape and (delays <= 2).all()
+    True
+    """
+    delay: int = 1          # s_max: rounds between ModelTraining and arrival
     fraction: float = 0.25  # fraction of each round's clients that straggle
     discount: float = 0.5   # γ: an arrived gradient weighs w * γ^s
+    jitter: bool = False    # per-straggler random delay in [0, delay]
     seed: int = 0
 
     def __post_init__(self):
@@ -80,11 +96,20 @@ class StalenessConfig:
         return max(0, min(m - 1, int(round(self.fraction * m))))
 
     def pick(self, m: int, rng: np.random.RandomState):
-        """(straggler_idx, fresh_idx) for one round — sorted int32."""
+        """One round's straggler pick — sorted int32 index arrays.
+
+        Returns ``(straggler_idx, fresh_idx)``, plus a per-straggler
+        ``delays`` array when ``jitter`` is on. With jitter off the rng
+        consumes exactly the draws it always did (the off-path stays
+        bitwise-identical)."""
         k = self.num_stragglers(m)
         perm = rng.permutation(m)
-        return (np.sort(perm[:k]).astype(np.int32),
-                np.sort(perm[k:]).astype(np.int32))
+        sel = (np.sort(perm[:k]).astype(np.int32),
+               np.sort(perm[k:]).astype(np.int32))
+        if not self.jitter:
+            return sel
+        return sel + (rng.randint(0, self.delay + 1,
+                                  size=k).astype(np.int32),)
 
 
 class Prefetcher:
@@ -95,7 +120,16 @@ class Prefetcher:
     and is only ever called from this one thread, in block order, so
     seeded streams advance exactly as they would synchronously. The
     queue holds at most ``depth`` staged blocks (double-buffered device
-    slots at depth 1). Failure on either side releases the other:
+    slots at depth 1). Example::
+
+        pf = Prefetcher(stage, sizes=[1, 1, 1], depth=2)
+        try:
+            for _ in range(3):
+                staged = pf.get()       # blocks until produced
+        finally:
+            pf.close()                  # joins the thread, always
+
+    Failure on either side releases the other:
 
       * a producer exception is re-raised in the consumer at the
         ``get()`` for the failed block;
@@ -155,7 +189,11 @@ class Prefetcher:
 def plan_blocks(rounds: int, eval_every: int, fuse: int) -> list:
     """Round-block sizes covering rounds 1..``rounds``: at most ``fuse``
     rounds per block, and a block boundary at every eval round (and the
-    final round) so evaluation always sees post-step φ on the host."""
+    final round) so evaluation always sees post-step φ on the host.
+
+    >>> plan_blocks(10, 4, 3)   # eval rounds 4 and 8 end their blocks
+    [3, 1, 3, 1, 2]
+    """
     fuse = max(1, fuse)
     bounds = {rounds}
     if eval_every:
@@ -185,6 +223,15 @@ class AsyncRoundEngine:
                           (state, metrics with leading (k,) axis)
       comm                CommTracker (ticked per round by the engine)
       history             trainer's record list, appended at flush time
+
+    Example — a minimal pipelined driver (what both trainers' ``run``
+    methods build)::
+
+        engine = AsyncRoundEngine(stage=stage, step=step, comm=comm,
+                                  history=history, prefetch_depth=2,
+                                  flush_every=4)
+        state = engine.run(state, rounds=100, eval_every=10,
+                           evaluate=lambda st: {"eval_acc": ...})
     """
     stage: Callable
     step: Callable

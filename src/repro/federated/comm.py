@@ -11,6 +11,13 @@ accuracy. This tracker reproduces that accounting exactly:
   so the reported communication reduction matches what is transmitted)
   client compute = m * flops_per_client (measured once from the compiled
   client function via XLA cost analysis).
+
+Crucially, ``phi_bytes`` is *per tracker*: each trainer builds its own
+tracker from its own θ, so methods that ship different-sized models pay
+different per-round bytes. That is what makes the paper's §4.3 model-size
+argument measurable — FedMeta's small local-head recommender vs FedAvg's
+global-service head (DESIGN.md §13) — and the summaries expose the size
+itself as ``phi_MB`` so comparison artifacts record the asymmetry.
 """
 from __future__ import annotations
 
@@ -75,6 +82,10 @@ class CommTracker:
             "upload_MB": snap.upload_bytes / 1e6,
             "download_MB": snap.download_bytes / 1e6,
             "client_GFLOPs": snap.total_flops / 1e9,
+            # the per-method model size the bytes above are multiples of —
+            # constant across rounds, recorded so artifacts carry the
+            # local-head vs global-head θ asymmetry explicitly
+            "phi_MB": self.phi_bytes / 1e6,
         }
 
     def summary(self) -> dict:

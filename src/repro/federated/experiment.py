@@ -1,15 +1,21 @@
-"""Unified experiment plane: FedMeta vs FedAvg under identical conditions.
+"""Scenario plane: FedMeta vs FedAvg on any registered workload, under
+identical conditions.
 
-The paper's headline claim (Fig. 3 / §4) is a *comparison*: FedMeta
-reaches a target accuracy with 2.82–4.33× less communication than FedAvg
-and higher final accuracy. A comparison is only meaningful when every
-method runs under the same client split, the same per-round client
-sampling stream, and the same communication accounting — the evaluation
-discipline urged by Li et al. (2019). This module is the one place that
-enforces those invariants:
+The paper's headline claims (Fig. 3 / §4, Table 3 / §4.3) are
+*comparisons*: FedMeta reaches a target accuracy with 2.82–4.33× less
+communication than FedAvg, with higher final accuracy — and on the
+production recommendation workload a small per-client local-head model
+beats FedAvg's global-service classifier on both accuracy and bytes. A
+comparison is only meaningful when every method runs under the same
+client split, the same per-round client sampling stream, and honest
+per-method communication accounting — the evaluation discipline urged by
+Li et al. (2019). This module is the one place that enforces those
+invariants:
 
   * one `FederatedDataset`, one `split_clients(seed)` call, shared by
-    every method;
+    every method; scenarios may expose a per-method *view* of it (e.g.
+    the recommend scenario's local-label view for FedMeta) but views
+    preserve client order and sizes, so sampling streams stay identical;
   * every trainer consumes an identical task-sampling stream: one
     `sample_task_batch` per round from a `RandomState(seed)` that both
     `FederatedTrainer` and `FedAvgTrainer` advance with the exact same
@@ -17,13 +23,20 @@ enforces those invariants:
     stream), so round r samples the same clients for every method;
   * per-round history (train loss, eval accuracy, cumulative
     upload/download bytes, client GFLOPs) recorded by the trainers
-    themselves at full round resolution;
+    themselves at full round resolution — with per-METHOD θ sizes, so a
+    method shipping a smaller model pays fewer bytes per round
+    (`CommTracker.phi_MB`, the paper's §4.3 size argument);
   * the paper's comm-to-target-accuracy metric (`comm_to_target`)
-    computed from those histories against one shared target.
+    computed from those histories against one shared target;
+  * per-method fairness accounting (`fairness_stats`): the distribution
+    of per-client accuracies at final eval — deciles, variance, and the
+    worst-10% mean — following the federated-fairness lens of Li et
+    al.'s survey.
 
 `run_comparison(plan)` is the entry point; it emits a JSON artifact
-under ``results/experiments/`` with the full curves and the
-comm-to-target table (DESIGN.md §11).
+under ``results/experiments/`` with the full curves, the comm-to-target
+table, and the fairness blocks (schema documented field-by-field in
+DESIGN.md §13).
 """
 from __future__ import annotations
 
@@ -75,12 +88,93 @@ def _shakespeare_model():
     return char_lstm(vocab=70, hidden=64, embed_dim=8)
 
 
+# ---- recommend scenario (paper §4.3 / Table 3) --------------------------
+# Scaled constants of the synthetic production dataset: the paper has
+# 2,400 services with 2–36 per client and a 40-way local head; we keep
+# the 40-way head and the 2–36-per-client structure over a 120-service
+# catalogue (data/synth_recommend.py).
+REC_SERVICES, REC_CTX, REC_HEAD = 120, 24, 40
+REC_FEAT = REC_CTX + REC_SERVICES
+
+
+def _recommend_data(num_clients, seed):
+    from repro.data import make_recommend
+    return make_recommend(num_clients=num_clients, num_services=REC_SERVICES,
+                          ctx_dim=REC_CTX, seed=seed)
+
+
+def _recommend_model():
+    """The GLOBAL-head recommender FedAvg must ship: one classifier over
+    the whole service catalogue (the paper's 2420-way MIXED model)."""
+    from repro.models.paper import rec_nn
+    return rec_nn(REC_FEAT, REC_SERVICES)
+
+
+def _recommend_meta_model(plan):
+    """The LOCAL-head recommender FedMeta ships: same trunk, but a
+    ``local_head``-way output over the client's own services — the θ-size
+    asymmetry behind the paper's Table-3 bytes advantage."""
+    from repro.models.paper import rec_nn
+    return rec_nn(REC_FEAT, plan.local_head or REC_HEAD)
+
+
+def _recommend_meta_data(clients, plan):
+    from repro.data import localize_clients
+    return localize_clients(clients, plan.local_head or REC_HEAD)
+
+
+def _recommend_loss(model):
+    from repro.core import classification_loss
+    return classification_loss(model.apply, topk=(4,))   # Table 3: Top-1/Top-4
+
+
+# ---- LM personalization scenario ----------------------------------------
+# Per-client dialect corpora (data/lm_tasks.make_lm_clients) on a reduced
+# assigned LM architecture — small vocab/seq so the path runs in CI.
+LM_VOCAB, LM_SEQ = 64, 16
+
+
+def _lm_data(num_clients, seed):
+    from repro.data import make_lm_clients
+    return make_lm_clients(num_clients=num_clients, seq_len=LM_SEQ,
+                           vocab=LM_VOCAB, seed=seed)
+
+
+def _lm_model():
+    import dataclasses as dc
+
+    from repro.configs import get_config, reduced_config
+    from repro.launch.steps import make_apply_fn
+    from repro.models import init_lm
+    from repro.models.paper import Model
+    cfg = dc.replace(reduced_config(get_config("smollm-360m")),
+                     num_layers=2, d_model=64, num_heads=2, num_kv_heads=1,
+                     head_dim=32, d_ff=128, vocab_size=LM_VOCAB,
+                     dtype="float32")
+    return Model(lambda key: init_lm(key, cfg), make_apply_fn(cfg),
+                 f"lm-{cfg.name}")
+
+
+def _lm_loss(model):
+    from repro.core import lm_pair_loss
+    return lm_pair_loss(model.apply)
+
+
 # dataset name -> builders + paper-Table-4-shaped hyperparameters
 # (CPU-scaled, same values as benchmarks/table2_leaf.py). Like the
 # paper's Table 4, learning rates may be tuned per algorithm
 # (method_overrides) — the sharing discipline is about data splits,
 # sampling streams, and comm accounting, not about forcing one lr onto
 # algorithms with different update geometries.
+#
+# Scenario extension points (all optional; DESIGN.md §13):
+#   loss        loss(model) -> (loss_fn, eval_fn); default
+#               classification_loss(model.apply)
+#   meta_model  meta_model(plan) -> Model for the FedMeta methods (the
+#               baselines keep `model`) — the recommend local head
+#   meta_data   meta_data(clients, plan) -> clients view the FedMeta
+#               methods train/eval on (order- and size-preserving)
+#   support_frac / local_head   extra per-dataset plan defaults
 DATASETS = {
     "femnist": dict(data=_femnist_data, model=_femnist_model,
                     inner_lr=0.01, outer_lr=1e-3, local_lr=1e-3,
@@ -97,6 +191,25 @@ DATASETS = {
                         inner_lr=0.1, outer_lr=1e-2, local_lr=1e-3,
                         clients_per_round=8, support_size=24, query_size=24,
                         num_clients=48),
+    "recommend": dict(data=_recommend_data, model=_recommend_model,
+                      loss=_recommend_loss, meta_model=_recommend_meta_model,
+                      meta_data=_recommend_meta_data,
+                      # the local head's label semantics are per-client
+                      # (local id 0 = the client's first service), so
+                      # META models lean on real local adaptation — the
+                      # paper trains them with 100 local steps; 5 inner
+                      # steps at lr 0.1 is the CPU-scaled analogue
+                      # (probed: 1 step 0.11, 5 steps 0.24 test acc vs
+                      # FedAvg 0.046)
+                      inner_lr=0.1, inner_steps=5,
+                      outer_lr=1e-3, local_lr=1e-3,
+                      clients_per_round=8, support_size=32, query_size=16,
+                      num_clients=120, support_frac=0.5,
+                      local_head=REC_HEAD),
+    "lm": dict(data=_lm_data, model=_lm_model, loss=_lm_loss,
+               inner_lr=0.1, outer_lr=3e-3, local_lr=1e-2,
+               clients_per_round=4, support_size=4, query_size=4,
+               num_clients=32, support_frac=0.5),
 }
 
 
@@ -107,8 +220,19 @@ class ExperimentPlan:
     ``pipeline`` selects the FedMeta execution substrate: "tree" (pytree
     φ), "packed" (flat parameter plane, PR 1) or "client_plane" (flat
     inner loop too, PR 2) — the baselines are substrate-independent.
-    ``data_fn(num_clients, seed)`` / ``model_fn()`` override the named
-    registry for custom scenarios (they are not serialized)."""
+    ``data_fn(num_clients, seed)`` / ``model_fn()`` / ``loss_builder
+    (model)`` / ``meta_model_fn(plan)`` / ``meta_data_fn(clients, plan)``
+    override the named registry for custom scenarios (callables are not
+    serialized). ``local_head`` is the FedMeta head width for scenarios
+    with a per-method model-size asymmetry (recommend: 40, the paper's
+    §4.3 local classifier; None = no asymmetry).
+
+    Example — the committed recommend artifact's plan::
+
+        plan = default_plan("recommend", rounds=60, eval_every=2)
+        out = run_comparison(plan, log=print)
+        print(format_table(out))
+    """
     dataset: str
     methods: Sequence[str] = DEFAULT_METHODS
     rounds: int = 100
@@ -119,6 +243,7 @@ class ExperimentPlan:
     support_size: int = 16
     query_size: int = 16
     inner_lr: float = 0.01
+    inner_steps: int = 1           # FedMeta inner-loop steps (adapt + train)
     outer_lr: float = 1e-3
     local_lr: float = 1e-3
     local_steps: int = 3
@@ -137,6 +262,8 @@ class ExperimentPlan:
     prefetch_depth: int = 0
     flush_every: int = 1
     fuse_rounds: int = 1                 # lax.scan round blocks (packed)
+    # FedMeta head width for local-head scenarios (DESIGN.md §13)
+    local_head: Optional[int] = None
     # per-method lr/step overrides, paper-Table-4 style:
     # {"fomaml": {"inner_lr": 0.05}}
     method_overrides: dict = dataclasses.field(default_factory=dict)
@@ -144,16 +271,26 @@ class ExperimentPlan:
     name: str = ""
     data_fn: Optional[Callable] = None
     model_fn: Optional[Callable] = None
+    loss_builder: Optional[Callable] = None
+    meta_model_fn: Optional[Callable] = None
+    meta_data_fn: Optional[Callable] = None
 
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)
-        d.pop("data_fn"), d.pop("model_fn")
+        for fn in ("data_fn", "model_fn", "loss_builder", "meta_model_fn",
+                   "meta_data_fn"):
+            d.pop(fn)
         d["methods"] = list(self.methods)
         return d
 
 
 def default_plan(dataset: str, **overrides) -> ExperimentPlan:
-    """Plan with the registry hyperparameters for a named dataset."""
+    """Plan with the registry hyperparameters for a named dataset.
+
+    >>> plan = default_plan("recommend", rounds=8, eval_every=2)
+    >>> plan.local_head, plan.clients_per_round
+    (40, 8)
+    """
     su = DATASETS[dataset]
     base = dict(clients_per_round=su["clients_per_round"],
                 support_size=su["support_size"],
@@ -163,13 +300,26 @@ def default_plan(dataset: str, **overrides) -> ExperimentPlan:
                 # copy: plans must not alias (and mutate) the registry
                 method_overrides={k: dict(v) for k, v in
                                   su.get("method_overrides", {}).items()})
+    for opt in ("support_frac", "local_head", "inner_steps"):
+        if opt in su:
+            base[opt] = su[opt]
     base.update(overrides)
     return ExperimentPlan(dataset=dataset, **base)
 
 
 def make_trainer(plan: ExperimentPlan, method: str, loss_fn, eval_fn,
                  train_clients):
-    """One trainer per method, all sharing plan-level sampling config."""
+    """One trainer per method, all sharing plan-level sampling config.
+
+    FedAvg methods get a `FedAvgTrainer` (full-model shipping), FedMeta
+    methods a `FederatedTrainer` on the plan's pipeline; `method_overrides`
+    apply per method. Example::
+
+        tr = make_trainer(plan, "fomaml", loss_fn, eval_fn, train_clients)
+        state = tr.init(jax.random.PRNGKey(0), model.init)
+        state = tr.run(state, plan.rounds, eval_every=plan.eval_every,
+                       eval_clients=val_clients)
+    """
     common = dict(clients_per_round=plan.clients_per_round,
                   support_frac=plan.support_frac,
                   support_size=plan.support_size,
@@ -188,7 +338,8 @@ def make_trainer(plan: ExperimentPlan, method: str, loss_fn, eval_fn,
     from repro.optim import adam
     algo = make_algorithm(method, loss_fn, eval_fn,
                           inner_lr=over.get("inner_lr", plan.inner_lr),
-                          inner_steps=over.get("inner_steps", 1))
+                          inner_steps=over.get("inner_steps",
+                                               plan.inner_steps))
     packed = plan.pipeline in ("packed", "client_plane")
     return FederatedTrainer(
         algo, adam(over.get("outer_lr", plan.outer_lr)), train_clients,
@@ -196,6 +347,46 @@ def make_trainer(plan: ExperimentPlan, method: str, loss_fn, eval_fn,
         client_chunk=plan.client_chunk, packed=packed,
         client_plane=(plan.pipeline == "client_plane"),
         fuse_rounds=plan.fuse_rounds if packed else 1, **common)
+
+
+@dataclasses.dataclass
+class _View:
+    """One method family's view of the scenario: the client splits it
+    trains/evals on plus the model and loss that go with them."""
+    train: list
+    val: list
+    test: list
+    model: object
+    loss_fn: Callable
+    eval_fn: Callable
+
+
+def _build_views(plan: ExperimentPlan, su: dict):
+    """-> (global_view, meta_view): identical unless the scenario defines
+    a per-method asymmetry (meta_model / meta_data), in which case the
+    FedMeta methods get their own model and client-data view while the
+    baselines keep the global one. Views preserve client order and sizes,
+    so both consume identical seeded sampling streams."""
+    from repro.core import classification_loss
+    data_fn = plan.data_fn or su["data"]
+    model_fn = plan.model_fn or su["model"]
+    loss_builder = plan.loss_builder or su.get("loss") or (
+        lambda model: classification_loss(model.apply))
+    ds = data_fn(plan.num_clients, plan.seed)
+    train, val, test = ds.split_clients(seed=plan.seed)
+    model = model_fn()
+    gview = _View(train, val, test, model, *loss_builder(model))
+
+    meta_model_fn = plan.meta_model_fn or su.get("meta_model")
+    meta_data_fn = plan.meta_data_fn or su.get("meta_data")
+    if meta_model_fn is None and meta_data_fn is None:
+        return gview, gview
+    mmodel = meta_model_fn(plan) if meta_model_fn else model
+    mtrain, mval, mtest = (
+        (meta_data_fn(c, plan) for c in (train, val, test))
+        if meta_data_fn else (train, val, test))
+    return gview, _View(list(mtrain), list(mval), list(mtest), mmodel,
+                        *loss_builder(mmodel))
 
 
 def _eval_records(history: list) -> list:
@@ -212,7 +403,14 @@ def comm_to_target(history: list, target_acc: float,
     single noisy eval spike cannot set the table. History records carry
     cumulative comm fields, so the result is monotone in the target: a
     higher target can only cost more bytes. Returns None when the
-    target is never (sustainably) reached."""
+    target is never (sustainably) reached.
+
+    >>> hist = [{"round": r, "eval_acc": 0.1 * r, "comm_MB": 2.0 * r,
+    ...          "upload_MB": r, "download_MB": r, "client_GFLOPs": 0.0}
+    ...         for r in (1, 2, 3)]
+    >>> comm_to_target(hist, 0.2)["rounds"]
+    2
+    """
     evals = _eval_records(history)
     k = max(1, min(sustain, len(evals)))
     for i in range(len(evals) - k + 1):
@@ -225,6 +423,31 @@ def comm_to_target(history: list, target_acc: float,
                     "client_GFLOPs": rec["client_GFLOPs"],
                     "eval_acc": rec["eval_acc"]}
     return None
+
+
+def fairness_stats(per_client) -> dict:
+    """Accuracy-distribution (fairness) summary across clients, after
+    Li et al.'s federated-learning survey: deciles, variance, and the
+    mean over the worst-off 10% of clients. A method can buy mean
+    accuracy by abandoning its tail; these fields make that visible in
+    every comparison artifact.
+
+    Pure function of the per-client accuracies, so committed artifacts
+    can be re-derived exactly (test_scenario_plane pins this).
+
+    >>> fairness_stats([1.0, 0.0])["worst10_mean"]
+    0.0
+    """
+    import numpy as np
+    a = np.sort(np.asarray(per_client, np.float64))
+    k = max(1, int(np.ceil(0.1 * len(a))))
+    return {
+        "mean": float(a.mean()),
+        "variance": float(a.var()),
+        "deciles": [float(np.percentile(a, p)) for p in range(10, 100, 10)],
+        "worst10_mean": float(a[:k].mean()),
+        "num_clients": int(len(a)),
+    }
 
 
 def _sustained_best(history: list, sustain: int) -> Optional[float]:
@@ -254,36 +477,42 @@ def _shared_target(results: dict, sustain: int) -> Optional[float]:
 def run_comparison(plan: ExperimentPlan, out_dir: str = "results/experiments",
                    log: Callable = None, save: bool = True) -> dict:
     """Run every plan method on the shared split/stream; return (and
-    optionally write) the full comparison record."""
+    optionally write) the full comparison record.
+
+    The record's schema is documented field-by-field in DESIGN.md §13;
+    the JSON artifact lands at ``{out_dir}/{name or dataset}_compare.json``.
+    Example::
+
+        out = run_comparison(default_plan("sent140", rounds=60), log=print)
+        print(format_table(out))              # comm-to-target table
+        out["methods"]["maml"]["fairness"]    # per-client acc distribution
+    """
     say = log or (lambda *a, **k: None)
     su = DATASETS.get(plan.dataset, {})
-    data_fn = plan.data_fn or su["data"]
-    model_fn = plan.model_fn or su["model"]
-    ds = data_fn(plan.num_clients, plan.seed)
-    train, val, test = ds.split_clients(seed=plan.seed)
-    model = model_fn()
-    from repro.core import classification_loss
-    loss_fn, eval_fn = classification_loss(model.apply)
+    gview, mview = _build_views(plan, su)
 
     results = {}
     for method in plan.methods:
-        tr = make_trainer(plan, method, loss_fn, eval_fn, train)
-        state = tr.init(jax.random.PRNGKey(plan.seed), model.init)
+        view = gview if method in FEDAVG_METHODS else mview
+        tr = make_trainer(plan, method, view.loss_fn, view.eval_fn,
+                          view.train)
+        state = tr.init(jax.random.PRNGKey(plan.seed), view.model.init)
         tr.measure_flops(state)
         t0 = time.time()
         state = tr.run(state, plan.rounds, eval_every=plan.eval_every,
-                       eval_clients=val)
+                       eval_clients=view.val)
         seconds = time.time() - t0
         # reuse the trainer's jitted evaluator — a fresh one would
         # recompile the whole adapt+eval graph for the test pass
         if method in FEDAVG_METHODS:
             test_acc, per_client, test_loss = evaluate_global(
-                eval_fn, state["theta"], test, support_frac=plan.support_frac,
+                view.eval_fn, state["theta"], view.test,
+                support_frac=plan.support_frac,
                 support_size=plan.support_size, query_size=plan.query_size,
                 seed=plan.seed, evaluator=tr.evaluator())
         else:
             test_acc, per_client, test_loss = evaluate_meta(
-                tr.algo, tr.phi_tree(state), test,
+                tr.algo, tr.phi_tree(state), view.test,
                 support_frac=plan.support_frac,
                 support_size=plan.support_size, query_size=plan.query_size,
                 seed=plan.seed, evaluator=tr.evaluator())
@@ -291,10 +520,12 @@ def run_comparison(plan: ExperimentPlan, out_dir: str = "results/experiments",
             "history": tr.history,
             "test_acc": test_acc, "test_loss": test_loss,
             "per_client": [float(a) for a in per_client],
+            "fairness": fairness_stats(per_client),
             "comm": tr.comm.summary(), "seconds": seconds,
         }
         say(f"[{plan.dataset}] {method}: test_acc={test_acc:.4f} "
-            f"comm_MB={tr.comm.summary()['comm_MB']:.2f} ({seconds:.0f}s)")
+            f"comm_MB={tr.comm.summary()['comm_MB']:.2f} "
+            f"phi_MB={tr.comm.summary()['phi_MB']:.4f} ({seconds:.0f}s)")
 
     target = plan.target_acc if plan.target_acc is not None \
         else _shared_target(results, plan.sustain_evals)
@@ -337,7 +568,13 @@ def run_comparison(plan: ExperimentPlan, out_dir: str = "results/experiments",
 
 
 def format_table(out: dict) -> str:
-    """Human-readable comm-to-target table for one comparison record."""
+    """Human-readable comm-to-target table for one comparison record.
+
+    >>> print(format_table(run_comparison(plan, save=False)))  # doctest: +SKIP
+    target accuracy: 0.7
+    method         rounds   comm_MB    up_MB  down_MB   GFLOPs test_acc vs_fedavg
+    ...
+    """
     lines = [f"target accuracy: {out['target_acc']}",
              f"{'method':<14} {'rounds':>6} {'comm_MB':>9} {'up_MB':>8} "
              f"{'down_MB':>8} {'GFLOPs':>8} {'test_acc':>8} {'vs_fedavg':>9}"]

@@ -246,9 +246,11 @@ class FederatedTrainer:
                     (dp(tb.query_x), dp(tb.query_y)),
                     dp(tb.weight) if self.weighted else None)
             if self.staleness is not None:
-                strag, fresh = self.staleness.pick(
+                # (straggler_idx, fresh_idx[, delays]) — delays only
+                # with jitter on, so the off-path stays bit-identical
+                sel = self.staleness.pick(
                     self.clients_per_round, self._stale_rng)
-                args += ((dp(strag), dp(fresh)),)
+                args += (tuple(dp(s) for s in sel),)
             return args
 
         evaluate = None

@@ -192,6 +192,101 @@ def test_staleness_off_is_bitwise_noop():
     assert [{k: v for k, v in r.items()} for r in zero] == base
 
 
+def test_staleness_jitter_off_bitwise_identical(monkeypatch):
+    """jitter=False must be bitwise-identical to the pre-jitter
+    fixed-delay behavior: same rng draw pattern (no extra randint),
+    same step path. Pinned by monkeypatching `pick` back to the legacy
+    implementation and comparing record-for-record."""
+    cfg = StalenessConfig(delay=2, fraction=0.34, discount=0.5)
+    assert cfg.jitter is False
+    off = _fedmeta_history("fomaml", packed=True, staleness=cfg)
+
+    def legacy_pick(self, m, rng):
+        k = self.num_stragglers(m)
+        perm = rng.permutation(m)
+        return (np.sort(perm[:k]).astype(np.int32),
+                np.sort(perm[k:]).astype(np.int32))
+
+    monkeypatch.setattr(StalenessConfig, "pick", legacy_pick)
+    legacy = _fedmeta_history("fomaml", packed=True, staleness=cfg)
+    assert off == legacy
+
+
+def test_staleness_jitter_hand_check():
+    """Jittered staleness against an independent reference simulator:
+    per-straggler delays d ∈ [0, delay], arrival at round r+d with
+    weight w·γ^d (d=0 joins its own round like a fresh row), weights
+    renormalized over the rows aggregated that round — including a
+    round where TWO earlier stragglers (d=2 and d=1) arrive together."""
+    cfg = StalenessConfig(delay=2, fraction=0.34, discount=0.5, jitter=True)
+    algo = make_algorithm("fomaml", LOSS_FN, EVAL_FN, inner_lr=0.05)
+    phi0 = algo.init_state(jax.random.PRNGKey(0), _TinyModel.init)
+    plane = plane_for(phi0)
+    opt = sgd(0.1)
+    step = make_packed_meta_train_step(algo, opt, plane, staleness=cfg)
+    state = init_packed_state(opt, plane, phi0, staleness=cfg,
+                              clients_per_round=3)
+    assert set(state["stale"]) == {"G", "w", "c", "d"}
+
+    rng = np.random.RandomState(3)
+    stream = TaskStream(TRAIN, 3, 0.5, 8, 8, rng)
+    tbs = stream.take(5)
+    # (straggler, fresh, delays) per round — exercises d=1, d=0
+    # (immediate join), d=2, and a double arrival in round 5
+    sels = [([1], [0, 2], [1]), ([0], [1, 2], [0]), ([2], [0, 1], [2]),
+            ([0], [1, 2], [1]), ([1], [0, 2], [0])]
+
+    def rows(tb, phi_tree):
+        return [np.asarray(plane.pack(algo.client_grad(
+            phi_tree, (tb.support_x[i], tb.support_y[i]),
+            (tb.query_x[i], tb.query_y[i]))[0])) for i in range(3)]
+
+    # ---- independent reference: pending-arrival list, no ring buffer
+    flat = np.asarray(plane.pack(phi0))
+    expected = []
+    pending = []   # (arrive_round, weight*gamma^d, gradient row)
+    for r, (tb, (strag, fresh, delays)) in enumerate(zip(tbs, sels), start=1):
+        g = rows(tb, plane.unpack(jnp.asarray(flat)))
+        w = tb.weight / tb.weight.sum()
+        agg = [(w[i], g[i]) for i in fresh]
+        for j, d in zip(strag, delays):
+            if d == 0:
+                agg.append((w[j], g[j]))
+            else:
+                pending.append((r + d, cfg.discount ** d * w[j], g[j]))
+        agg += [(pw, pg) for (ar, pw, pg) in pending if ar == r]
+        pending = [p for p in pending if p[0] != r]
+        tot = sum(pw for pw, _ in agg)
+        flat = flat - 0.1 * sum(pw * pg for pw, pg in agg) / tot
+        expected.append(flat.copy())
+
+    # ---- the jitted step, same schedule
+    for tb, (strag, fresh, delays) in zip(tbs, sels):
+        sel = (jnp.asarray(strag, jnp.int32), jnp.asarray(fresh, jnp.int32),
+               jnp.asarray(delays, jnp.int32))
+        state, _ = step(state,
+                        (jnp.asarray(tb.support_x), jnp.asarray(tb.support_y)),
+                        (jnp.asarray(tb.query_x), jnp.asarray(tb.query_y)),
+                        jnp.asarray(tb.weight), sel)
+    np.testing.assert_allclose(np.asarray(state["phi"]), expected[-1],
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_staleness_jitter_runs_through_trainer():
+    """The trainer wires the 3-tuple pick through staging/prefetch; a
+    jittered run completes and (generically) diverges from fixed-delay."""
+    fixed = _fedmeta_history(
+        "fomaml", packed=True,
+        staleness=StalenessConfig(delay=2, fraction=0.34, discount=0.5))
+    jit = _fedmeta_history(
+        "fomaml", packed=True, prefetch_depth=2,
+        staleness=StalenessConfig(delay=2, fraction=0.34, discount=0.5,
+                                  jitter=True))
+    assert len(jit) == len(fixed)
+    assert jit != fixed
+    assert _no_prefetch_threads()
+
+
 def test_staleness_validation():
     algo = make_algorithm("fomaml", LOSS_FN, EVAL_FN, inner_lr=0.05)
     with pytest.raises(ValueError):

@@ -1,0 +1,62 @@
+"""Markdown link hygiene for the repo docs (README.md, DESIGN.md, ...).
+
+Relative links must point at files/directories that exist in the repo,
+and intra-doc anchors (``#section``) must match a real heading of the
+target document — a renamed DESIGN.md section or moved artifact breaks
+CI here instead of silently rotting in the README.
+"""
+import os
+import re
+
+import pytest
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+DOCS = ["README.md", "DESIGN.md", "ROADMAP.md", "CHANGES.md", "PAPER.md"]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#+\s+(.*)$", re.MULTILINE)
+
+
+def _anchor(heading: str) -> str:
+    """GitHub's heading -> anchor slug (lowercase, spaces to dashes,
+    punctuation dropped; § and similar symbols are stripped)."""
+    slug = heading.strip().lower().replace(" ", "-")
+    return re.sub(r"[^\w\-]", "", slug, flags=re.UNICODE)
+
+
+def _doc_anchors(path: str) -> set:
+    with open(path, encoding="utf-8") as f:
+        return {_anchor(h) for h in HEADING_RE.findall(f.read())}
+
+
+def _links(path: str):
+    with open(path, encoding="utf-8") as f:
+        return LINK_RE.findall(f.read())
+
+
+@pytest.mark.parametrize("doc", [d for d in DOCS
+                                 if os.path.exists(os.path.join(ROOT, d))])
+def test_relative_links_resolve(doc):
+    doc_path = os.path.join(ROOT, doc)
+    bad = []
+    for link in _links(doc_path):
+        if link.startswith(("http://", "https://", "mailto:")):
+            continue
+        target, _, anchor = link.partition("#")
+        base = doc_path if not target else os.path.normpath(
+            os.path.join(os.path.dirname(doc_path), target))
+        if target and not os.path.exists(base):
+            bad.append(f"{link}: missing file {target}")
+            continue
+        if anchor:
+            if not base.endswith(".md"):
+                continue
+            if _anchor(anchor) not in _doc_anchors(base):
+                bad.append(f"{link}: no heading for #{anchor} in "
+                           f"{os.path.relpath(base, ROOT)}")
+    assert not bad, f"{doc}: dead links:\n  " + "\n  ".join(bad)
+
+
+def test_readme_exists():
+    assert os.path.exists(os.path.join(ROOT, "README.md")), \
+        "README.md is part of the documented surface (PR 5)"

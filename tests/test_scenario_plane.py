@@ -1,0 +1,207 @@
+"""Scenario-plane regression tests (DESIGN.md §13).
+
+Covers the PR-5 invariants: the local-head label view (order/size
+preservation → identical sampling streams), the per-method θ-size comm
+asymmetry in the recommend scenario, the LM personalization path through
+`run_comparison`, fairness-metric math against hand-computed values, and
+the committed artifacts' fairness blocks re-derived exactly from their
+stored per-client accuracies (mirroring the PR-4 depth-0 stability pin).
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.data.federated import ClientData, FederatedDataset
+from repro.data.lm_tasks import make_lm_clients
+from repro.data.synth_recommend import (localize_clients, localize_recommend,
+                                        make_recommend)
+from repro.federated.experiment import (ExperimentPlan, default_plan,
+                                        fairness_stats, run_comparison)
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "experiments")
+
+
+# ---- local-head label view ----------------------------------------------
+
+def test_localize_clients_mapping():
+    ds = make_recommend(num_clients=12, num_services=60, ctx_dim=4,
+                        mean_records=40, seed=0)
+    local = localize_clients(ds.clients, head_size=40)
+    assert len(local) == len(ds.clients)
+    for orig, loc in zip(ds.clients, local):
+        # order, features and sizes preserved => identical seeded streams
+        assert loc.n == orig.n
+        np.testing.assert_array_equal(loc.x, orig.x)
+        services = np.unique(orig.y)
+        # local ids are the rank of the service in the client's sorted
+        # service set — a bijection the client can build offline
+        np.testing.assert_array_equal(
+            np.unique(loc.y), np.arange(len(services)))
+        np.testing.assert_array_equal(services[loc.y], orig.y)
+
+    view = localize_recommend(ds, head_size=40)
+    assert view.num_classes == 40
+    for a, b in zip(view.clients, local):
+        np.testing.assert_array_equal(a.y, b.y)
+
+
+def test_localize_clients_rejects_small_head():
+    c = ClientData(np.zeros((5, 2), np.float32),
+                   np.array([0, 3, 7, 9, 11], np.int32))
+    with pytest.raises(ValueError, match="head_size"):
+        localize_clients([c], head_size=3)
+
+
+def test_dataset_view_contract():
+    ds = FederatedDataset([ClientData(np.zeros((3, 2), np.float32),
+                                      np.array([0, 1, 0], np.int64))], 2)
+    v = ds.view(lambda c: ClientData(c.x, 1 - c.y), num_classes=2)
+    np.testing.assert_array_equal(v.clients[0].y, [1, 0, 1])
+    with pytest.raises(ValueError, match="preserve client sizes"):
+        ds.view(lambda c: ClientData(c.x[:1], c.y[:1]))
+
+
+# ---- recommend scenario through the plane -------------------------------
+
+def test_recommend_comparison_theta_asymmetry(tmp_path):
+    """FedMeta trains the 40-way local head, FedAvg the global-service
+    head — the per-method CommTracker must charge different θ bytes, and
+    every artifact block must carry fairness fields."""
+    plan = default_plan("recommend", methods=("fedavg", "fomaml"),
+                        rounds=3, eval_every=1, num_clients=24)
+    out = run_comparison(plan, out_dir=str(tmp_path), log=None)
+    fa, fm = out["methods"]["fedavg"], out["methods"]["fomaml"]
+    # size asymmetry: global head strictly bigger than the local head
+    assert fa["comm"]["phi_MB"] > fm["comm"]["phi_MB"]
+    # same rounds, same per-round client count -> FedAvg pays strictly
+    # more bytes (both legs scale with its bigger θ)
+    assert fa["comm"]["rounds"] == fm["comm"]["rounds"] == 3
+    assert fa["comm"]["download_MB"] > fm["comm"]["download_MB"]
+    assert fa["comm"]["upload_MB"] > fm["comm"]["upload_MB"]
+    # per-round history carries the per-method size too
+    assert fa["history"][0]["phi_MB"] == pytest.approx(
+        fa["comm"]["phi_MB"])
+    # Table-3 metrics: the recommend loss adds top-4 to every record
+    assert "top4" in fm["history"][0]
+    # fairness block on every method, serialized into the artifact
+    with open(out["path"]) as f:
+        loaded = json.load(f)
+    for m in plan.methods:
+        fair = loaded["methods"][m]["fairness"]
+        assert set(fair) == {"mean", "variance", "deciles", "worst10_mean",
+                             "num_clients"}
+        assert len(fair["deciles"]) == 9
+    assert loaded["plan"]["local_head"] == 40
+
+
+def test_recommend_views_share_sampling_stream():
+    """The FedMeta (local-label) and FedAvg (global-label) views must
+    consume identical task streams: same client picks, same support and
+    query EXAMPLES every round (only the label space differs)."""
+    from repro.data.federated import TaskStream
+    ds = make_recommend(num_clients=16, num_services=60, ctx_dim=4,
+                        mean_records=40, seed=0)
+    local = localize_clients(ds.clients, head_size=40)
+    a = TaskStream(ds.clients, 4, 0.5, 8, 8, np.random.RandomState(7))
+    b = TaskStream(local, 4, 0.5, 8, 8, np.random.RandomState(7))
+    for _ in range(3):
+        ta, tb = a.next(), b.next()
+        np.testing.assert_array_equal(ta.support_x, tb.support_x)
+        np.testing.assert_array_equal(ta.query_x, tb.query_x)
+        np.testing.assert_array_equal(ta.weight, tb.weight)
+        np.testing.assert_array_equal(ta.query_count, tb.query_count)
+
+
+# ---- LM personalization through the plane -------------------------------
+
+def test_make_lm_clients_interface():
+    ds = make_lm_clients(num_clients=6, mean_seqs=5, seq_len=8, vocab=32,
+                         seed=0)
+    assert ds.num_classes == 32 and len(ds.clients) == 6
+    for c in ds.clients:
+        assert c.x.dtype == np.int32 and c.x.shape[1] == 8
+        assert (c.x >= 0).all() and (c.x < 32).all()
+        assert 5 <= c.n < 10
+        np.testing.assert_array_equal(c.y, c.x[:, -1])
+    # deterministic under seed
+    ds2 = make_lm_clients(num_clients=6, mean_seqs=5, seq_len=8, vocab=32,
+                          seed=0)
+    np.testing.assert_array_equal(ds.clients[3].x, ds2.clients[3].x)
+
+
+def test_lm_comparison_smoke():
+    """The LM personalization path end-to-end: dialect corpora through
+    `run_comparison` on a reduced assigned LM arch, FedMeta vs FedAvg on
+    the shared stream, next-token eval accuracy in history."""
+    plan = default_plan("lm", methods=("fedavg", "fomaml"), rounds=2,
+                        eval_every=1, num_clients=12)
+    out = run_comparison(plan, save=False)
+    for m in ("fedavg", "fomaml"):
+        hist = out["methods"][m]["history"]
+        assert len(hist) == 2
+        assert all("eval_acc" in r and "comm_MB" in r for r in hist)
+        assert np.isfinite(out["methods"][m]["test_loss"])
+        assert "fairness" in out["methods"][m]
+    # one LM shipped both ways for both methods — same θ size here
+    assert out["methods"]["fedavg"]["comm"]["phi_MB"] == pytest.approx(
+        out["methods"]["fomaml"]["comm"]["phi_MB"])
+
+
+# ---- fairness metrics ----------------------------------------------------
+
+def test_fairness_stats_hand_computed():
+    accs = [0.1, 0.9, 0.5, 0.3, 0.7, 0.2, 0.8, 0.4, 0.6, 1.0]
+    f = fairness_stats(accs)
+    a = np.sort(np.asarray(accs))
+    assert f["mean"] == pytest.approx(0.55)
+    assert f["variance"] == pytest.approx(np.var(accs))
+    # worst 10% of 10 clients = the single worst client
+    assert f["worst10_mean"] == pytest.approx(0.1)
+    assert f["num_clients"] == 10
+    assert f["deciles"] == [pytest.approx(np.percentile(a, p))
+                            for p in range(10, 100, 10)]
+    # non-divisible pool: worst-10% of 25 clients = worst ceil(2.5)=3
+    accs25 = [i / 25 for i in range(25)]
+    assert fairness_stats(accs25)["worst10_mean"] == pytest.approx(1 / 25)
+    # degenerate single client
+    g = fairness_stats([0.5])
+    assert g["worst10_mean"] == 0.5 and g["variance"] == 0.0
+
+
+def test_committed_artifacts_fairness_stable():
+    """Every committed comparison artifact carries fairness blocks that
+    re-derive EXACTLY from its stored per-client accuracies — the same
+    pure-function pin as the PR-4 comm-to-target stability test."""
+    paths = [os.path.join(ART_DIR, f) for f in sorted(os.listdir(ART_DIR))
+             if f.endswith(".json")]
+    assert paths, "committed experiment artifacts are missing"
+    for path in paths:
+        with open(path) as f:
+            rec = json.load(f)
+        for m, accs in rec["per_client"].items():
+            assert rec["methods"][m]["fairness"] == fairness_stats(accs), \
+                (path, m)
+
+
+def test_committed_recommend_artifact_bytes_advantage():
+    """The acceptance pin: the committed recommend artifact shows
+    FedMeta strictly below FedAvg on bytes-to-target under the
+    per-method θ-size accounting."""
+    paths = ["recommend_compare.json"]
+    for name in paths:
+        path = os.path.join(ART_DIR, name)
+        assert os.path.exists(path), "committed recommend artifact missing"
+        with open(path) as f:
+            rec = json.load(f)
+        table = rec["comm_to_target"]
+        fa = table["fedavg"] or rec["methods"]["fedavg"]["comm"]
+        for m, row in table.items():
+            if m in ("fedavg", "fedavg(meta)") or row is None:
+                continue
+            assert row["comm_MB"] < fa["comm_MB"], (name, m)
+        # the size asymmetry is recorded per method
+        assert (rec["methods"]["fedavg"]["comm"]["phi_MB"] >
+                rec["methods"]["maml"]["comm"]["phi_MB"])
