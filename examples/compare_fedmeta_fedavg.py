@@ -17,6 +17,7 @@ import argparse
 
 from repro.federated.experiment import (DEFAULT_METHODS, default_plan,
                                         format_table, run_comparison)
+from repro.federated.faults import FaultConfig
 
 
 def main():
@@ -44,6 +45,17 @@ def main():
                     help="deferred-metrics drain cadence (0 = at exit)")
     ap.add_argument("--fuse-rounds", type=int, default=1,
                     help="lax.scan round-block size (packed pipelines)")
+    ap.add_argument("--aggregator", default="mean",
+                    choices=["mean", "masked_mean", "screen", "trimmed"],
+                    help="FedMeta (m, N) aggregation mode (DESIGN.md "
+                         "§14; non-mean needs a packed pipeline)")
+    ap.add_argument("--fault-dropout", type=float, default=0.0,
+                    help="fraction of each round's clients whose update "
+                         "never arrives (fault injection)")
+    ap.add_argument("--fault-byzantine", type=float, default=0.0,
+                    help="fraction of Byzantine (sign-flip) clients")
+    ap.add_argument("--fault-nonfinite", type=float, default=0.0,
+                    help="fraction of clients uploading NaN gradients")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--outdir", default="results/experiments")
     ap.add_argument("--dry-run", action="store_true",
@@ -57,6 +69,12 @@ def main():
                 client_chunk=args.client_chunk or None, seed=args.seed,
                 prefetch_depth=args.prefetch_depth,
                 flush_every=args.flush_every, fuse_rounds=args.fuse_rounds)
+    if args.aggregator != "mean":
+        over["aggregator"] = args.aggregator
+    if args.fault_dropout or args.fault_byzantine or args.fault_nonfinite:
+        over["faults"] = FaultConfig(dropout=args.fault_dropout,
+                                     byzantine=args.fault_byzantine,
+                                     nonfinite=args.fault_nonfinite)
     if args.clients:
         over["num_clients"] = args.clients
     if args.support_frac is not None:

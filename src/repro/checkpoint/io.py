@@ -56,48 +56,97 @@ def _rebuild_sequences(node):
     return {k: _rebuild_sequences(v) for k, v in node.items()}
 
 
+def _to_packable(v):
+    """msgpack can't pack numpy scalar types (np.int64 step counters,
+    np.float32 metrics); unwrap them to native python scalars. Exact:
+    .item() preserves the value, and load-side jnp users re-cast."""
+    if isinstance(v, np.generic):
+        return v.item()
+    return v
+
+
 def save_pytree(path: str, tree: Any) -> None:
+    """Atomic: both files are written to temp names and ``os.replace``d
+    into place, payload first, manifest last — ``latest_step`` keys on
+    manifests, so a crash mid-save leaves either nothing visible or a
+    complete checkpoint (at worst an orphaned ``.npz``), never a
+    manifest pointing at a torn payload."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten(tree)
     arrays = {}
-    manifest = {"keys": [], "scalars": {}}
+    manifest = {"keys": [], "scalars": {}, "bf16": []}
     for k, v in flat.items():
         if isinstance(v, (jnp.ndarray, np.ndarray)):
-            arrays[k] = np.asarray(v)
+            a = np.asarray(v)
+            if a.dtype == jnp.bfloat16:
+                # numpy's npz format can't serialize ml_dtypes; f32 is
+                # a superset of bf16 so the round-trip stays exact
+                a = a.astype(np.float32)
+                manifest["bf16"].append(k)
+            arrays[k] = a
             manifest["keys"].append(k)
         else:
-            manifest["scalars"][k] = v
-    np.savez_compressed(path + ".npz", **arrays)
-    with open(path + ".manifest", "wb") as f:
+            manifest["scalars"][k] = _to_packable(v)
+    # np.savez appends ".npz" unless the name already ends with it, so
+    # the temp name must keep the suffix for os.replace to find it
+    tmp_npz = path + ".tmp.npz"
+    np.savez_compressed(tmp_npz, **arrays)
+    os.replace(tmp_npz, path + ".npz")
+    tmp_man = path + ".tmp.manifest"
+    with open(tmp_man, "wb") as f:
         f.write(msgpack.packb(manifest))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp_man, path + ".manifest")
 
 
 def load_pytree(path: str) -> Any:
     with open(path + ".manifest", "rb") as f:
         manifest = msgpack.unpackb(f.read())
     data = np.load(path + ".npz")
+    bf16 = set(manifest.get("bf16", ()))
     root: dict = {}
     for k in manifest["keys"]:
-        _set_path(root, k.split("/"), jnp.asarray(data[k]))
+        a = jnp.asarray(data[k])
+        if k in bf16:
+            a = a.astype(jnp.bfloat16)
+        _set_path(root, k.split("/"), a)
     for k, v in manifest["scalars"].items():
         _set_path(root, k.split("/"), v)
     return _rebuild_sequences(root)
 
 
-def save_server_state(ckpt_dir: str, step: int, state: Any) -> str:
+def save_server_state(ckpt_dir: str, step: int, state: Any,
+                      keep_last: int | None = None) -> str:
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
     save_pytree(path, state)
+    if keep_last:
+        steps = sorted(s for s in _all_steps(ckpt_dir) if s != step)
+        for old in steps[:max(0, len(steps) - (keep_last - 1))]:
+            for suffix in (".manifest", ".npz"):
+                try:  # retention is best-effort; a vanished file is fine
+                    os.remove(os.path.join(
+                        ckpt_dir, f"step_{old:08d}{suffix}"))
+                except OSError:
+                    pass
     return path
 
 
-def latest_step(ckpt_dir: str) -> int | None:
+def _all_steps(ckpt_dir: str) -> list:
     if not os.path.isdir(ckpt_dir):
-        return None
+        return []
     steps = []
     for name in os.listdir(ckpt_dir):
+        # temp names ("step_X.tmp.manifest") deliberately don't match:
+        # a crashed half-write is invisible to discovery
         m = re.match(r"step_(\d+)\.manifest$", name)
         if m:
             steps.append(int(m.group(1)))
+    return steps
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = _all_steps(ckpt_dir)
     return max(steps) if steps else None
 
 

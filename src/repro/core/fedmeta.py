@@ -264,6 +264,11 @@ def make_packed_meta_train_step(algo, optimizer, plane: FlatPlane, *,
                                 block_dtype=None,
                                 client_plane: bool = False,
                                 staleness=None,
+                                aggregator: str = "mean",
+                                screen_factor: float = 3.0,
+                                trim: int = 1,
+                                faults=None,
+                                guard: bool = False,
                                 mesh=None, mesh_axis: str | None = None,
                                 jit: bool = True, donate: bool = True):
     """Meta-train step over the packed plane: state = {phi: (N,), opt}.
@@ -299,17 +304,79 @@ def make_packed_meta_train_step(algo, optimizer, plane: FlatPlane, *,
     ``discount**delay`` and renormalized over the aggregated rows.
     Fresh and stale rows go through the SAME fused weighted-aggregate
     kernel, so the hot path stays one flat pass (DESIGN.md §12).
+
+    The failure plane (DESIGN.md §14) adds four orthogonal knobs, all
+    defaulting to off and all leaving the default graph bitwise
+    untouched when off:
+
+      * ``aggregator`` ∈ ``kernels.meta_update.ops.AGGREGATORS`` picks
+        the (m, N) → (N,) reduction ("mean" = today's exact path;
+        masked_mean / screen / trimmed are the robust modes — see
+        ``robust_aggregate``). ``screen_factor``/``trim`` parameterize
+        the screen threshold and per-coordinate trim count.
+      * ``faults`` (federated.faults.FaultConfig; vmap axis only) makes
+        the step take an extra per-round ``fault`` mask tuple and
+        corrupts the gradient block *before* aggregation — dropped rows
+        zero their weight, non-finite rows turn NaN, Byzantine rows are
+        adversarially rewritten. Composes with ``staleness``: corrupted
+        rows flow through the ring like honest ones.
+      * ``guard`` turns on the fused non-finite check: one reduction
+        over the flat meta-gradient; if anything is non-finite the
+        round is *skipped* — φ and the optimizer state pass through
+        unchanged (the staleness ring still advances: arrivals
+        happened) — and the round's metrics carry ``skipped=1``.
     """
+    from repro.federated.faults import apply_faults
     from repro.optim.optimizers import make_flat_optimizer
     impl = mu_ops.resolve_impl(impl)
     flat_opt = make_flat_optimizer(optimizer, impl=impl)
     bd = block_dtype or jnp.float32
+    if aggregator not in mu_ops.AGGREGATORS:
+        raise ValueError(f"unknown aggregator {aggregator!r}; expected "
+                         f"one of {mu_ops.AGGREGATORS}")
+    robust = aggregator != "mean"
     if staleness is not None and client_axis != "vmap":
         raise ValueError("staleness-aware aggregation needs the full "
                          "(m, N) gradient block before the reduce — "
                          "client_axis='vmap' only")
+    if (faults is not None or robust) and client_axis != "vmap":
+        raise ValueError("fault injection / robust aggregation need the "
+                         "full (m, N) gradient block before the reduce — "
+                         "client_axis='vmap' only")
 
-    def step(state, support, query, weights=None, stale_sel=None):
+    def aggregate(G, w_agg, *, prenorm):
+        """The (m, N) → (N,) reduce. ``prenorm`` marks the staleness
+        call sites whose historical mean path normalizes the weights
+        itself — kept verbatim so mean mode stays bitwise identical."""
+        if aggregator == "mean":
+            if prenorm:
+                w_agg = w_agg / jnp.sum(w_agg)
+            return mu_ops.weighted_aggregate(G, w_agg, impl=impl)
+        return mu_ops.robust_aggregate(
+            G, w_agg, aggregator=aggregator, impl=impl,
+            screen_factor=screen_factor, trim=trim)
+
+    def finish(state, meta_g, metrics, extra=None):
+        """Outer optimizer step + optional non-finite guard."""
+        new_flat, new_opt = flat_opt.update(state["phi"], meta_g,
+                                            state["opt"])
+        if guard:
+            # one fused reduce over the flat plane; skip-and-log round
+            # semantics: a non-finite meta-gradient leaves φ AND the
+            # optimizer state (incl. Adam's step count) untouched
+            ok = jnp.all(jnp.isfinite(meta_g))
+            new_flat = jnp.where(ok, new_flat, state["phi"])
+            new_opt = jax.tree.map(
+                lambda n, o: jnp.where(ok, n, o), new_opt, state["opt"])
+            metrics = {**metrics,
+                       "skipped": jnp.logical_not(ok).astype(jnp.float32)}
+        new_state = {"phi": new_flat, "opt": new_opt}
+        if extra is not None:
+            new_state.update(extra)
+        return new_state, metrics
+
+    def step(state, support, query, weights=None, stale_sel=None,
+             fault=None):
         phi = plane.unpack(state["phi"])
         m = jax.tree.leaves(support)[0].shape[0]
         w = _normalize_weights(weights, m)
@@ -350,7 +417,11 @@ def make_packed_meta_train_step(algo, optimizer, plane: FlatPlane, *,
             # shapes, still one pass through the fused kernel.
             strag, fresh, delays = stale_sel
             G, mets = chunk_grads(support, query)
-            metrics = _weighted_metrics(w, mets)
+            if faults is not None:
+                G, w, w_rep = apply_faults(faults, G, w, fault)
+            else:
+                w_rep = w
+            metrics = _weighted_metrics(w_rep, mets)
             buf = state["stale"]
             c = buf["c"] - 1
             arrive = (c <= 0) & (buf["w"] > 0)
@@ -364,8 +435,7 @@ def make_packed_meta_train_step(algo, optimizer, plane: FlatPlane, *,
             agg_w = jnp.concatenate(
                 [w[fresh], jnp.where(delays == 0, w[strag], 0.0),
                  arrived_w.reshape(dk)], axis=0)
-            meta_g = mu_ops.weighted_aggregate(
-                agg_G, agg_w / jnp.sum(agg_w), impl=impl)
+            meta_g = aggregate(agg_G, agg_w, prenorm=True)
             kept_w = jnp.where(arrive, 0.0, buf["w"])
             new_stale = {
                 "G": jnp.concatenate([buf["G"][1:], G[strag][None]], axis=0),
@@ -374,10 +444,7 @@ def make_packed_meta_train_step(algo, optimizer, plane: FlatPlane, *,
                      jnp.where(delays > 0, w[strag], 0.0)[None]], axis=0),
                 "c": jnp.concatenate([c[1:], delays[None]], axis=0),
                 "d": jnp.concatenate([buf["d"][1:], delays[None]], axis=0)}
-            new_flat, new_opt = flat_opt.update(state["phi"], meta_g,
-                                                state["opt"])
-            return ({"phi": new_flat, "opt": new_opt, "stale": new_stale},
-                    metrics)
+            return finish(state, meta_g, metrics, {"stale": new_stale})
 
         if staleness is not None:
             # straggler rows detour through the delay ring; arrived rows
@@ -386,23 +453,34 @@ def make_packed_meta_train_step(algo, optimizer, plane: FlatPlane, *,
             # pass through the fused kernel
             strag, fresh = stale_sel
             G, mets = chunk_grads(support, query)
-            metrics = _weighted_metrics(w, mets)
+            if faults is not None:
+                G, w, w_rep = apply_faults(faults, G, w, fault)
+            else:
+                w_rep = w
+            metrics = _weighted_metrics(w_rep, mets)
             buf = state["stale"]
             arrived_w = buf["w"][0] * jnp.float32(
                 staleness.discount ** staleness.delay)
             agg_G = jnp.concatenate([G[fresh], buf["G"][0]], axis=0)
             agg_w = jnp.concatenate([w[fresh], arrived_w], axis=0)
-            meta_g = mu_ops.weighted_aggregate(
-                agg_G, agg_w / jnp.sum(agg_w), impl=impl)
+            meta_g = aggregate(agg_G, agg_w, prenorm=True)
             new_stale = {
                 "G": jnp.concatenate([buf["G"][1:], G[strag][None]], axis=0),
                 "w": jnp.concatenate([buf["w"][1:], w[strag][None]], axis=0)}
-            new_flat, new_opt = flat_opt.update(state["phi"], meta_g,
-                                                state["opt"])
-            return ({"phi": new_flat, "opt": new_opt, "stale": new_stale},
-                    metrics)
+            return finish(state, meta_g, metrics, {"stale": new_stale})
 
-        if client_axis == "vmap":
+        if client_axis == "vmap" and (faults is not None or robust):
+            # the failure plane needs the (m, N) block before the
+            # reduce; taken only when a knob is on, so the default
+            # vmap graph below stays bitwise identical
+            G, mets = chunk_grads(support, query)
+            if faults is not None:
+                G, w_agg, w_rep = apply_faults(faults, G, w, fault)
+            else:
+                w_agg = w_rep = w
+            metrics = _weighted_metrics(w_rep, mets)
+            meta_g = aggregate(G, w_agg, prenorm=False)
+        elif client_axis == "vmap":
             meta_g, metrics = packed_chunk(support, query, w)
         elif client_axis == "scan":
             def body(acc, inp):
@@ -429,8 +507,6 @@ def make_packed_meta_train_step(algo, optimizer, plane: FlatPlane, *,
         else:
             raise ValueError(client_axis)
 
-        new_flat, new_opt = flat_opt.update(state["phi"], meta_g,
-                                            state["opt"])
-        return {"phi": new_flat, "opt": new_opt}, metrics
+        return finish(state, meta_g, metrics)
 
     return _maybe_jit(step, jit, donate)

@@ -1,6 +1,7 @@
-from repro.federated.async_engine import (AsyncRoundEngine, Prefetcher,
-                                          StalenessConfig)
+from repro.federated.async_engine import (AsyncRoundEngine, PrefetchError,
+                                          Prefetcher, StalenessConfig)
 from repro.federated.comm import CommTracker
+from repro.federated.faults import FaultConfig
 from repro.federated.fedavg import FedAvgTrainer
 from repro.federated.server import FederatedTrainer, evaluate_meta, evaluate_global
 from repro.federated.experiment import (ExperimentPlan, comm_to_target,

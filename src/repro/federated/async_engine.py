@@ -41,12 +41,20 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
+import time
 from typing import Callable, Optional
 
 import jax
 import numpy as np
 
 PREFETCH_THREAD_NAME = "repro-round-prefetch"
+
+
+class PrefetchError(RuntimeError):
+    """The prefetch producer failed permanently. Raised at the
+    consumer's ``get()`` with ``__cause__`` chained to the producer's
+    original exception, so the failing frame's traceback survives the
+    thread hop."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -132,17 +140,38 @@ class Prefetcher:
     Failure on either side releases the other:
 
       * a producer exception is re-raised in the consumer at the
-        ``get()`` for the failed block;
+        ``get()`` for the failed block, with the producer-frame
+        traceback intact (``max_retries > 0`` wraps it in a
+        ``PrefetchError`` naming the failed rounds, chained via
+        ``__cause__``);
       * ``close()`` (consumer exception or normal exit) sets the stop
         flag, drains the queue so a blocked ``put`` can observe it, and
-        joins the thread — no leaked threads when a step raises.
+        joins the thread — no leaked threads when a step raises;
+      * a ``get()`` that would otherwise block forever on a dead
+        producer (thread exited without staging the requested block)
+        raises instead of deadlocking — the stored producer error if
+        there is one, a ``PrefetchError`` otherwise.
+
+    ``max_retries`` bounds transient-failure retries per block: the
+    producer re-calls ``produce(k)`` up to that many extra times with
+    exponential backoff (``retry_backoff · 2^attempt`` seconds) before
+    giving up. ``produce`` must therefore be retry-safe: a failed call
+    must leave its seeded streams where they started (the trainers
+    snapshot/restore their RNGs around staging). ``first_round`` only
+    labels error messages — the round numbering a resumed run is at.
     """
 
-    def __init__(self, produce: Callable, sizes, depth: int):
+    def __init__(self, produce: Callable, sizes, depth: int, *,
+                 max_retries: int = 0, retry_backoff: float = 0.05,
+                 first_round: int = 1):
         self._produce = produce
         self._sizes = list(sizes)
         self._q: queue.Queue = queue.Queue(maxsize=max(1, depth))
         self._stop = threading.Event()
+        self._max_retries = max(0, max_retries)
+        self._retry_backoff = retry_backoff
+        self._first_round = first_round
+        self._error: Optional[BaseException] = None
         self._thread = threading.Thread(
             target=self._run, name=PREFETCH_THREAD_NAME, daemon=True)
         self._thread.start()
@@ -156,18 +185,64 @@ class Prefetcher:
                 continue
         return False
 
+    def _wrap(self, exc, k, r, attempts):
+        if self._max_retries == 0:
+            return exc      # no retry facility: surface verbatim
+        rounds = (f"round {r}" if k == 1 else
+                  f"rounds {r}..{r + k - 1}")
+        err = PrefetchError(
+            f"prefetch producer failed staging {rounds} after "
+            f"{attempts} attempt(s) (max_retries={self._max_retries} "
+            f"exhausted): {type(exc).__name__}: {exc}")
+        err.__cause__ = exc  # original traceback survives the hop
+        return err
+
+    def _produce_with_retry(self, k, r):
+        for attempt in range(self._max_retries + 1):
+            if self._stop.is_set():
+                return None
+            try:
+                return (None, self._produce(k))
+            except BaseException as exc:
+                if attempt >= self._max_retries:
+                    return (self._wrap(exc, k, r, attempt + 1), None)
+                time.sleep(self._retry_backoff * (2 ** attempt))
+        return None  # unreachable
+
     def _run(self):
+        r = self._first_round
         try:
             for k in self._sizes:
                 if self._stop.is_set():
                     return
-                if not self._put((None, self._produce(k))):
+                item = self._produce_with_retry(k, r)
+                if item is None:
                     return
-        except BaseException as exc:  # re-raised at the consumer's get()
+                if item[0] is not None:
+                    self._error = item[0]
+                    self._put(item)
+                    return
+                if not self._put(item):
+                    return
+                r += k
+        except BaseException as exc:  # pragma: no cover - safety net
+            self._error = exc
             self._put((exc, None))
 
     def get(self):
-        exc, item = self._q.get()
+        while True:
+            try:
+                exc, item = self._q.get(timeout=0.1)
+                break
+            except queue.Empty:
+                if not self._thread.is_alive():
+                    # the producer died without staging this block; the
+                    # stored error (if any) beats a blind deadlock
+                    if self._error is not None:
+                        raise self._error
+                    raise PrefetchError(
+                        "prefetch producer thread exited without "
+                        "staging the requested block")
         if exc is not None:
             raise exc
         return item
@@ -186,19 +261,28 @@ class Prefetcher:
         return self._thread.is_alive()
 
 
-def plan_blocks(rounds: int, eval_every: int, fuse: int) -> list:
-    """Round-block sizes covering rounds 1..``rounds``: at most ``fuse``
-    rounds per block, and a block boundary at every eval round (and the
-    final round) so evaluation always sees post-step φ on the host.
+def plan_blocks(rounds: int, eval_every: int, fuse: int,
+                start: int = 0) -> list:
+    """Round-block sizes covering rounds ``start + 1``..``rounds``: at
+    most ``fuse`` rounds per block, and a block boundary at every eval
+    round (and the final round) so evaluation always sees post-step φ
+    on the host. ``start > 0`` is the resumed-run case: the plan picks
+    up mid-schedule with the same absolute eval boundaries, so a
+    resumed run's blocks are the uninterrupted plan's tail.
 
     >>> plan_blocks(10, 4, 3)   # eval rounds 4 and 8 end their blocks
     [3, 1, 3, 1, 2]
+    >>> plan_blocks(10, 4, 3, start=4)
+    [3, 1, 2]
     """
     fuse = max(1, fuse)
+    if rounds <= start:
+        return []
     bounds = {rounds}
     if eval_every:
-        bounds.update(range(eval_every, rounds + 1, eval_every))
-    blocks, r = [], 0
+        bounds.update(b for b in range(eval_every, rounds + 1, eval_every)
+                      if b > start)
+    blocks, r = [], start
     for b in sorted(bounds):
         seg = b - r
         while seg > 0:
@@ -223,6 +307,12 @@ class AsyncRoundEngine:
                           (state, metrics with leading (k,) axis)
       comm                CommTracker (ticked per round by the engine)
       history             trainer's record list, appended at flush time
+      checkpoint          optional (state, round) -> None hook, called
+                          every ``checkpoint_every`` rounds at block
+                          boundaries (after the pending metrics flush,
+                          so a checkpointed history is never partial)
+      prefetch_retries    bounded retry-with-backoff for transient
+                          staging failures (Prefetcher max_retries)
 
     Example — a minimal pipelined driver (what both trainers' ``run``
     methods build)::
@@ -241,11 +331,16 @@ class AsyncRoundEngine:
     prefetch_depth: int = 0
     flush_every: int = 1
     fuse_rounds: int = 1
+    checkpoint: Optional[Callable] = None
+    checkpoint_every: int = 0
+    prefetch_retries: int = 0
 
     def run(self, state, rounds: int, *, eval_every: int = 0,
-            evaluate: Optional[Callable] = None, log: Callable = None):
+            evaluate: Optional[Callable] = None, log: Callable = None,
+            start_round: int = 0):
         fuse = self.fuse_rounds if self.fused_step is not None else 1
-        blocks = plan_blocks(rounds, eval_every if evaluate else 0, fuse)
+        blocks = plan_blocks(rounds, eval_every if evaluate else 0, fuse,
+                             start=start_round)
         pending: list = []
 
         def flush():
@@ -264,8 +359,11 @@ class AsyncRoundEngine:
 
         prefetch = None
         if self.prefetch_depth > 0:
-            prefetch = Prefetcher(self.stage, blocks, self.prefetch_depth)
-        r = 0
+            prefetch = Prefetcher(self.stage, blocks, self.prefetch_depth,
+                                  max_retries=self.prefetch_retries,
+                                  first_round=start_round + 1)
+        r = start_round
+        last_ckpt = start_round
         try:
             for bk in blocks:
                 staged = prefetch.get() if prefetch else self.stage(bk)
@@ -292,6 +390,13 @@ class AsyncRoundEngine:
                             self.flush_every and
                             r % self.flush_every == 0):
                         flush()
+                if (self.checkpoint is not None and self.checkpoint_every
+                        and r - last_ckpt >= self.checkpoint_every):
+                    # flush first: the payload captures history up to
+                    # and including round r, never a pending tail
+                    flush()
+                    self.checkpoint(state, r)
+                    last_ckpt = r
             return state
         finally:
             if prefetch is not None:

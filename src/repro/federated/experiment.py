@@ -49,6 +49,7 @@ from typing import Callable, Optional, Sequence
 import jax
 
 from repro.federated.fedavg import FedAvgTrainer
+from repro.federated.faults import FaultConfig
 from repro.federated.server import (FederatedTrainer, evaluate_global,
                                     evaluate_meta)
 
@@ -262,6 +263,16 @@ class ExperimentPlan:
     prefetch_depth: int = 0
     flush_every: int = 1
     fuse_rounds: int = 1                 # lax.scan round blocks (packed)
+    # failure plane (DESIGN.md §14): FedMeta (m, N) aggregation mode and
+    # optional per-round client-failure injection. Applies to the
+    # FedMeta methods only (the FedAvg baselines have no (m, N) gradient
+    # plane); requires pipeline="packed"/"client_plane". The faults
+    # config is a frozen dataclass and serializes into the artifact, so
+    # a robustness sweep's JSON records its exact failure model.
+    aggregator: str = "mean"             # mean|masked_mean|screen|trimmed
+    screen_factor: float = 3.0
+    trim: int = 1
+    faults: Optional["FaultConfig"] = None
     # FedMeta head width for local-head scenarios (DESIGN.md §13)
     local_head: Optional[int] = None
     # per-method lr/step overrides, paper-Table-4 style:
@@ -341,12 +352,18 @@ def make_trainer(plan: ExperimentPlan, method: str, loss_fn, eval_fn,
                           inner_steps=over.get("inner_steps",
                                                plan.inner_steps))
     packed = plan.pipeline in ("packed", "client_plane")
+    if (plan.faults is not None or plan.aggregator != "mean") and not packed:
+        raise ValueError("plan.faults / plan.aggregator need the packed "
+                         "pipeline — set pipeline='packed' or "
+                         "'client_plane'")
     return FederatedTrainer(
         algo, adam(over.get("outer_lr", plan.outer_lr)), train_clients,
         client_axis="chunked" if plan.client_chunk else "vmap",
         client_chunk=plan.client_chunk, packed=packed,
         client_plane=(plan.pipeline == "client_plane"),
-        fuse_rounds=plan.fuse_rounds if packed else 1, **common)
+        fuse_rounds=plan.fuse_rounds if packed else 1,
+        aggregator=plan.aggregator, screen_factor=plan.screen_factor,
+        trim=plan.trim, faults=plan.faults, **common)
 
 
 @dataclasses.dataclass

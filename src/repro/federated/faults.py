@@ -1,0 +1,136 @@
+"""Seeded per-round client-failure injection (DESIGN.md §14).
+
+Federated populations are unreliable (Li et al., 1908.07873): clients
+drop out mid-round, diverge locally and upload non-finite gradients, or
+are outright Byzantine. ``FaultConfig`` describes such a population with
+three independent failure fractions; each round a seeded pick assigns
+*disjoint* failure roles to the sampled clients:
+
+  * **dropout** — the client's update never arrives: its aggregation
+    weight is zeroed (the gradient row is computed but contributes
+    nothing; renormalization is the aggregator's job).
+  * **non-finite** — local divergence: the client's gradient row is
+    replaced by NaN. Plain mean aggregation is poisoned and relies on
+    the engine's non-finite guard to skip the round; screening/trimmed
+    aggregators reject the row and keep training.
+  * **Byzantine** — an adversarial upload: the row is replaced by
+    ``-scale·g`` (``"sign_flip"``) or by ``scale·N(0, 1)`` noise
+    (``"scaled_noise"``).
+
+Like ``StalenessConfig``, per-round counts are *static* functions of m
+(fractions rounded, total clamped to m−1 so at least one honest client
+always arrives) — the jitted step compiles once and zero-count failure
+modes are statically absent, keeping a disabled ``FaultConfig`` bitwise
+identical to no config at all. The per-round pick consumes its own
+``np.random.RandomState`` (seeded independently of task sampling and
+straggler picks), so enabling faults never perturbs the task stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BYZANTINE_MODES = ("sign_flip", "scaled_noise")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Per-round client failure model; all fractions of clients-per-round.
+
+    >>> cfg = FaultConfig(dropout=0.25, byzantine=0.25)
+    >>> cfg.counts(8)
+    (2, 0, 2)
+    >>> keep, nan_m, byz_m, seed = cfg.pick(8, np.random.RandomState(0))
+    >>> int(keep.sum()), int(nan_m.sum()), int(byz_m.sum())
+    (6, 0, 2)
+    """
+    dropout: float = 0.0      # fraction whose update never arrives
+    nonfinite: float = 0.0    # fraction uploading NaN gradients
+    byzantine: float = 0.0    # fraction uploading adversarial gradients
+    byzantine_mode: str = "sign_flip"   # or "scaled_noise"
+    byzantine_scale: float = 10.0       # magnitude of the adversarial row
+    seed: int = 0
+
+    def __post_init__(self):
+        for name in ("dropout", "nonfinite", "byzantine"):
+            f = getattr(self, name)
+            if not 0.0 <= f < 1.0:
+                raise ValueError(f"{name} fraction must be in [0, 1)")
+        if self.byzantine_mode not in BYZANTINE_MODES:
+            raise ValueError(f"byzantine_mode must be one of "
+                             f"{BYZANTINE_MODES}, got "
+                             f"{self.byzantine_mode!r}")
+
+    @property
+    def enabled(self) -> bool:
+        return (self.dropout > 0 or self.nonfinite > 0 or
+                self.byzantine > 0)
+
+    def counts(self, m: int) -> tuple:
+        """Static per-round (dropped, nonfinite, byzantine) counts.
+
+        Static shapes keep the step jitted once; the total is capped at
+        m − 1 (at least one honest arriving client), shaving overflow
+        off byzantine, then nonfinite, then dropout."""
+        ks = [int(round(f * m))
+              for f in (self.dropout, self.nonfinite, self.byzantine)]
+        over = max(0, sum(ks) - (m - 1))
+        for i in (2, 1, 0):
+            take = min(over, ks[i])
+            ks[i] -= take
+            over -= take
+        return tuple(ks)
+
+    def pick(self, m: int, rng: np.random.RandomState):
+        """One round's failure assignment — host-side mask arrays.
+
+        Returns ``(keep, nan_mask, byz_mask, noise_seed)``: a (m,) f32
+        arrival mask (0 = dropped), two (m,) bool failure masks, and a
+        uint32 seed for the scaled-noise draw. Roles are disjoint slices
+        of one permutation; the rng consumes the same draws regardless
+        of which modes are enabled, so fraction sweeps share the same
+        underlying assignment."""
+        kd, kn, kb = self.counts(m)
+        perm = rng.permutation(m)
+        keep = np.ones((m,), np.float32)
+        keep[perm[:kd]] = 0.0
+        nan_mask = np.zeros((m,), bool)
+        nan_mask[perm[kd:kd + kn]] = True
+        byz_mask = np.zeros((m,), bool)
+        byz_mask[perm[kd + kn:kd + kn + kb]] = True
+        seed = np.uint32(rng.randint(0, 2**31 - 1))
+        return keep, nan_mask, byz_mask, seed
+
+
+def apply_faults(cfg: FaultConfig, G, w, fault):
+    """Apply one round's failure assignment to the (m, N) gradient block.
+
+    ``fault`` is a (device-put) ``cfg.pick`` tuple. Returns
+    ``(G, w_agg, w_rep)``: the corrupted block, the aggregation weights
+    (dropped rows zeroed — renormalization is the aggregator's concern),
+    and the metric-reporting weights (renormalized over arrived clients,
+    since the server only sees metrics from clients that report back).
+    Every transform is gated on the *static* per-round count, so a
+    zero-fraction config leaves the jitted graph — and the numerics —
+    bitwise untouched."""
+    keep, nan_mask, byz_mask, noise_seed = fault
+    kd, kn, kb = cfg.counts(G.shape[0])
+    if kb:
+        if cfg.byzantine_mode == "sign_flip":
+            bad = (-jnp.float32(cfg.byzantine_scale)).astype(G.dtype) * G
+        else:
+            bad = (jnp.float32(cfg.byzantine_scale) * jax.random.normal(
+                jax.random.PRNGKey(noise_seed), G.shape,
+                jnp.float32)).astype(G.dtype)
+        G = jnp.where(byz_mask[:, None], bad, G)
+    if kn:
+        G = jnp.where(nan_mask[:, None], jnp.asarray(jnp.nan, G.dtype), G)
+    if kd:
+        w_agg = w * keep
+        w_rep = w_agg / jnp.sum(w_agg)
+    else:
+        w_agg = w_rep = w
+    return G, w_agg, w_rep

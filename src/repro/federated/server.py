@@ -21,8 +21,24 @@ from repro.data.federated import (TaskStream, sample_task_batch,
                                   stack_task_batches)
 from repro.federated.async_engine import AsyncRoundEngine, StalenessConfig
 from repro.federated.comm import CommTracker, measure_client_flops
+from repro.federated.faults import FaultConfig
+from repro.kernels.meta_update import ops as mu_ops
 from repro.optim import Optimizer
 from repro.utils.flat import plane_for
+
+
+def _rng_state_payload(state):
+    """np.random.RandomState.get_state() tuple -> checkpointable dict
+    (the 624-word key vector as an array, scalars as python types)."""
+    alg, keys, pos, has_gauss, cached = state
+    return {"alg": alg, "keys": np.asarray(keys, np.uint32),
+            "pos": int(pos), "has_gauss": int(has_gauss),
+            "cached": float(cached)}
+
+
+def _rng_state_from_payload(p):
+    return (str(p["alg"]), np.asarray(p["keys"], np.uint32),
+            int(p["pos"]), int(p["has_gauss"]), float(p["cached"]))
 
 
 def _batch_eval(eval_one, clients, m, support_frac, support_size, query_size,
@@ -127,6 +143,17 @@ class FederatedTrainer:
                                 # (0 = only at eval rounds / run() exit)
     fuse_rounds: int = 1        # lax.scan-over-rounds block size (packed)
     staleness: Optional[StalenessConfig] = None  # packed + vmap axis only
+    # ---- failure plane (DESIGN.md §14) ------------------------------
+    aggregator: str = "mean"    # mean | masked_mean | screen | trimmed
+    screen_factor: float = 3.0  # screen: clip rows > factor × median ‖g‖
+    trim: int = 1               # trimmed: per-coordinate trim count
+    faults: Optional[FaultConfig] = None  # packed + vmap axis only
+    guard: Optional[bool] = None  # non-finite skip-round guard; None =
+                                  # auto (on iff faults or robust agg)
+    prefetch_retries: int = 0   # transient staging failures retried
+    checkpoint_every: int = 0   # rounds between checkpoints (0 = off)
+    checkpoint_dir: Optional[str] = None
+    checkpoint_keep: int = 3    # keep-last-k retention
 
     def __post_init__(self):
         if self.client_plane and not self.packed:
@@ -142,6 +169,29 @@ class FederatedTrainer:
                 raise ValueError("staleness and fuse_rounds>1 are mutually "
                                  "exclusive (stragglers need per-round "
                                  "straggler picks)")
+        if self.aggregator not in mu_ops.AGGREGATORS:
+            raise ValueError(f"unknown aggregator {self.aggregator!r}; "
+                             f"expected one of {mu_ops.AGGREGATORS}")
+        if self.faults is not None or self.aggregator != "mean":
+            if not self.packed or self.client_axis != "vmap":
+                raise ValueError("fault injection / robust aggregation "
+                                 "need the full (m, N) client block — "
+                                 "packed=True and client_axis='vmap'")
+        if self.faults is not None and self.fuse_rounds > 1:
+            raise ValueError("faults and fuse_rounds>1 are mutually "
+                             "exclusive (failures need per-round picks)")
+        if self.aggregator == "trimmed" and \
+                2 * self.trim >= self.clients_per_round:
+            raise ValueError(f"trimmed mean needs 2·trim < clients_per_"
+                             f"round ({self.trim} vs "
+                             f"{self.clients_per_round})")
+        if self.guard is None:
+            # auto: any failure-plane knob needs skip-round semantics
+            self.guard = (self.faults is not None or
+                          self.aggregator != "mean")
+        if self.guard and not self.packed:
+            raise ValueError("the non-finite guard is a flat-plane check "
+                             "— packed=True only")
         # the packed step needs φ's FlatPlane, built in init(); the tree
         # step has no such dependency and is built eagerly
         self._step = None if self.packed else make_meta_train_step(
@@ -153,6 +203,9 @@ class FederatedTrainer:
         self._rng = np.random.RandomState(self.seed)
         self._stale_rng = (np.random.RandomState(self.staleness.seed)
                            if self.staleness is not None else None)
+        self._fault_rng = (np.random.RandomState(self.faults.seed)
+                           if self.faults is not None else None)
+        self._rng_snaps: dict = {}   # round -> rng states (prefetch-safe)
         self._evaluator = make_meta_evaluator(self.algo)
         self.comm: Optional[CommTracker] = None
         self.history: list = []
@@ -165,8 +218,11 @@ class FederatedTrainer:
                       client_chunk=self.client_chunk, impl=self.impl,
                       block_dtype=self.block_dtype,
                       client_plane=self.client_plane,
-                      staleness=self.staleness, mesh=self.mesh,
-                      mesh_axis=self.mesh_axis)
+                      staleness=self.staleness,
+                      aggregator=self.aggregator,
+                      screen_factor=self.screen_factor, trim=self.trim,
+                      faults=self.faults, guard=bool(self.guard),
+                      mesh=self.mesh, mesh_axis=self.mesh_axis)
             self._step = make_packed_meta_train_step(
                 self.algo, self.optimizer, self._plane, **kw)
             if self.fuse_rounds > 1:
@@ -221,36 +277,125 @@ class FederatedTrainer:
             self.comm.flops_per_client = fl
         return fl
 
+    def _stage_block(self, stream, dp, k):
+        """Host half of one round block: sample + device_put staging.
+        Runs on the prefetch thread (in block order) when pipelined."""
+        if k > 1:   # fused-K: one stacked (k, m, ...) staged buffer
+            tb = stack_task_batches(stream.take(k))
+            return ((dp(tb.support_x), dp(tb.support_y)),
+                    (dp(tb.query_x), dp(tb.query_y)),
+                    dp(tb.weight) if self.weighted else None)
+        tb = stream.next()
+        args = ((dp(tb.support_x), dp(tb.support_y)),
+                (dp(tb.query_x), dp(tb.query_y)),
+                dp(tb.weight) if self.weighted else None)
+        if self.staleness is not None:
+            # (straggler_idx, fresh_idx[, delays]) — delays only
+            # with jitter on, so the off-path stays bit-identical
+            sel = self.staleness.pick(
+                self.clients_per_round, self._stale_rng)
+            args += (tuple(dp(s) for s in sel),)
+        elif self.faults is not None:
+            args += (None,)   # stale_sel placeholder (positional call)
+        if self.faults is not None:
+            fault = self.faults.pick(
+                self.clients_per_round, self._fault_rng)
+            args += (tuple(dp(f) for f in fault),)
+        return args
+
+    # ---- crash-safe checkpointing (DESIGN.md §14) -------------------
+    def _capture_rngs(self):
+        """Snapshot every host-side seeded stream the run consumes."""
+        snap = {"task": self._rng.get_state()}
+        if self._stale_rng is not None:
+            snap["stale"] = self._stale_rng.get_state()
+        if self._fault_rng is not None:
+            snap["fault"] = self._fault_rng.get_state()
+        return snap
+
+    def _restore_rngs(self, snap):
+        self._rng.set_state(snap["task"])
+        if self._stale_rng is not None:
+            self._stale_rng.set_state(snap["stale"])
+        if self._fault_rng is not None:
+            self._fault_rng.set_state(snap["fault"])
+
+    def save_checkpoint(self, state, round_: int, ckpt_dir=None) -> str:
+        """Write one atomic checkpoint capturing everything a resumed
+        run needs for bit-identical history: train state (φ, optimizer,
+        staleness ring), the RNG states *as of round ``round_``* (under
+        prefetching the live streams have already advanced past the
+        checkpointed round — the engine hook uses the snapshot staged
+        at that round's block boundary), CommTracker counters, and the
+        flushed history."""
+        from repro.checkpoint.io import save_server_state
+        snap = self._rng_snaps.pop(round_, None) or self._capture_rngs()
+        self._rng_snaps = {r: s for r, s in self._rng_snaps.items()
+                           if r > round_}
+        payload = {
+            "round": int(round_),
+            "state": state,
+            "rng": {k: _rng_state_payload(s) for k, s in snap.items()},
+            "comm_rounds": int(self.comm.rounds),
+            "flops_per_client": float(self.comm.flops_per_client or 0.0),
+            "history": list(self.history),
+        }
+        return save_server_state(ckpt_dir or self.checkpoint_dir,
+                                 round_, payload,
+                                 keep_last=self.checkpoint_keep)
+
+    def resume(self, ckpt_dir=None, step: int | None = None):
+        """Restore a killed run from its latest (or ``step``-numbered)
+        checkpoint. Call after ``init()``; returns ``(state,
+        start_round)`` for ``run(state, rounds,
+        start_round=start_round)`` — the resumed tail reproduces the
+        uninterrupted run's history record-for-record."""
+        from repro.checkpoint.io import load_server_state
+        payload = load_server_state(ckpt_dir or self.checkpoint_dir, step)
+        for name, rng in (("task", self._rng), ("stale", self._stale_rng),
+                          ("fault", self._fault_rng)):
+            if name in payload["rng"] and rng is not None:
+                rng.set_state(_rng_state_from_payload(
+                    payload["rng"][name]))
+        self.comm.rounds = int(payload["comm_rounds"])
+        if payload["flops_per_client"]:
+            self.comm.flops_per_client = payload["flops_per_client"]
+        self.history[:] = payload["history"]
+        state = payload["state"]
+        return state, int(payload["round"])
+
     def run(self, state, rounds: int, eval_every: int = 0,
-            eval_clients=None, log: Callable = None):
+            eval_clients=None, log: Callable = None,
+            start_round: int = 0):
         """Drive ``rounds`` rounds through the async round engine
         (DESIGN.md §12). The default knobs (prefetch_depth=0,
         flush_every=1, fuse_rounds=1) reproduce the synchronous loop
         exactly; with staleness off, every pipelined configuration
         yields bit-identical history under the same seed. A record is
         appended EVERY round — convergence curves at full resolution,
-        not subsampled to eval_every; eval fields only when evaluated."""
+        not subsampled to eval_every; eval fields only when evaluated.
+        ``start_round`` continues a resumed run (see ``resume``)."""
         stream = TaskStream(self.train_clients, self.clients_per_round,
                             self.support_frac, self.support_size,
                             self.query_size, self._rng)
         dp = jax.device_put
+        produced = {"r": start_round}   # prefetch-thread round cursor
 
         def stage(k):
-            if k > 1:   # fused-K: one stacked (k, m, ...) staged buffer
-                tb = stack_task_batches(stream.take(k))
-                return ((dp(tb.support_x), dp(tb.support_y)),
-                        (dp(tb.query_x), dp(tb.query_y)),
-                        dp(tb.weight) if self.weighted else None)
-            tb = stream.next()
-            args = ((dp(tb.support_x), dp(tb.support_y)),
-                    (dp(tb.query_x), dp(tb.query_y)),
-                    dp(tb.weight) if self.weighted else None)
-            if self.staleness is not None:
-                # (straggler_idx, fresh_idx[, delays]) — delays only
-                # with jitter on, so the off-path stays bit-identical
-                sel = self.staleness.pick(
-                    self.clients_per_round, self._stale_rng)
-                args += (tuple(dp(s) for s in sel),)
+            # retry safety: a transiently failing stage() must not leak
+            # partial stream draws, or the retry would see different
+            # tasks than the synchronous run
+            entry = self._capture_rngs()
+            try:
+                args = self._stage_block(stream, dp, k)
+            except BaseException:
+                self._restore_rngs(entry)
+                raise
+            produced["r"] += k
+            if self.checkpoint_every:
+                # rng states *after* this block = the states a resume
+                # from its boundary round must start from
+                self._rng_snaps[produced["r"]] = self._capture_rngs()
             return args
 
         evaluate = None
@@ -264,10 +409,17 @@ class FederatedTrainer:
                     evaluator=self._evaluator)
                 return {"eval_acc": acc, "eval_loss": loss}
 
+        checkpoint = None
+        if self.checkpoint_every and self.checkpoint_dir:
+            checkpoint = lambda st, r: self.save_checkpoint(st, r)  # noqa: E731
         engine = AsyncRoundEngine(
             stage=stage, step=lambda st, a: self._step(st, *a),
             comm=self.comm, history=self.history, fused_step=self._fused,
             prefetch_depth=self.prefetch_depth,
-            flush_every=self.flush_every, fuse_rounds=self.fuse_rounds)
+            flush_every=self.flush_every, fuse_rounds=self.fuse_rounds,
+            checkpoint=checkpoint,
+            checkpoint_every=self.checkpoint_every,
+            prefetch_retries=self.prefetch_retries)
         return engine.run(state, rounds, eval_every=eval_every,
-                          evaluate=evaluate, log=log)
+                          evaluate=evaluate, log=log,
+                          start_round=start_round)

@@ -18,7 +18,14 @@ import os
 import jax.numpy as jnp
 
 from repro.kernels.meta_update import ref
-from repro.kernels.meta_update.aggregate import (weighted_aggregate_flat,
+from repro.kernels.meta_update.aggregate import (masked_mean_flat,
+                                                 masked_mean_ref,
+                                                 row_liveness,
+                                                 screened_aggregate_flat,
+                                                 screened_aggregate_ref,
+                                                 trimmed_mean_flat,
+                                                 trimmed_mean_ref,
+                                                 weighted_aggregate_flat,
                                                  weighted_aggregate_ref)
 from repro.kernels.meta_update.fused import (TILE,  # noqa: F401 (re-export)
                                              inner_update_plane,
@@ -95,3 +102,48 @@ def weighted_aggregate(gs, w, *, impl: str | None = None):
         return weighted_aggregate_ref(gs, w)
     return weighted_aggregate_flat(gs, w,
                                    interpret=(impl == "pallas_interpret"))
+
+
+AGGREGATORS = ("mean", "masked_mean", "screen", "trimmed")
+
+
+def robust_aggregate(gs, w, *, aggregator: str = "mean",
+                     impl: str | None = None, screen_factor: float = 3.0,
+                     trim: int = 1):
+    """Failure-plane reduction over the (m, N) client block (§14).
+
+      mean         Σ w·g — the plain weighted kernel, caller-normalized
+                   weights; byte-for-byte today's path.
+      masked_mean  Σ w·g / Σ w — renormalizes over arrived (w > 0) rows,
+                   so dropouts shrink the round, not the gradient.
+      screen       reject non-finite rows, clip rows with
+                   ‖g‖ > screen_factor × median(live ‖g‖), renormalize.
+      trimmed      coordinate-wise trimmed mean over live (arrived,
+                   finite) rows, dropping the ``trim`` largest and
+                   smallest values per coordinate — unweighted, the
+                   classic Byzantine-robust estimator.
+
+    All four share the impl switch; non-mean aggregators may return a
+    non-finite result on degenerate rounds (every row dead, or fewer
+    than 2·trim + 1 live rows) — that is deliberate: the engine's
+    non-finite guard turns it into a skipped round."""
+    impl = resolve_impl(impl)
+    interp = impl == "pallas_interpret"
+    if aggregator == "mean":
+        return weighted_aggregate(gs, w, impl=impl)
+    if aggregator == "masked_mean":
+        if impl == "xla":
+            return masked_mean_ref(gs, w)
+        return masked_mean_flat(gs, w, interpret=interp)
+    if aggregator == "screen":
+        if impl == "xla":
+            return screened_aggregate_ref(gs, w, factor=screen_factor)
+        return screened_aggregate_flat(gs, w, factor=screen_factor,
+                                       interpret=interp)
+    if aggregator == "trimmed":
+        live = row_liveness(gs, w)
+        if impl == "xla":
+            return trimmed_mean_ref(gs, live, trim=trim)
+        return trimmed_mean_flat(gs, live, trim=trim, interpret=interp)
+    raise ValueError(f"unknown aggregator {aggregator!r}; "
+                     f"expected one of {AGGREGATORS}")

@@ -415,8 +415,10 @@ def test_committed_artifacts_comm_to_target_stable():
     shift what the experiment plane would emit."""
     art_dir = os.path.join(os.path.dirname(__file__), "..",
                            "results", "experiments")
+    # *_compare.json is the comparison-artifact naming convention;
+    # other schemas (e.g. the §14 robustness sweep) live alongside
     paths = [os.path.join(art_dir, f) for f in sorted(os.listdir(art_dir))
-             if f.endswith(".json")]
+             if f.endswith("_compare.json")]
     assert paths, "committed experiment artifacts are missing"
     for path in paths:
         with open(path) as f:

@@ -1,0 +1,345 @@
+"""Failure-plane invariants (DESIGN.md §14).
+
+Three contracts ship here: (1) robust aggregators on the (m, N) client
+plane — dropout-masked renormalization preserves the effective weight
+sum, norm screening clips outlier rows, and the trimmed-mean kernel
+matches its NaN-sort oracle on adversarial rows; (2) the non-finite
+guard is a bitwise no-op on clean runs for all four FedMeta algorithms
+and skips poisoned rounds leaving φ and the optimizer untouched; (3)
+disabled fault injection (zero fractions, aggregator="mean") leaves
+every pipeline bit-identical to a config-free run. Plus a pin on the
+committed robustness artifact: robust aggregators must hold accuracy at
+the Byzantine fraction where plain mean collapses.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import classification_loss, make_algorithm
+from repro.federated.async_engine import StalenessConfig
+from repro.federated.faults import FaultConfig, apply_faults
+from repro.federated.server import FederatedTrainer
+from repro.kernels.meta_update.aggregate import (
+    masked_mean_flat, masked_mean_ref, row_liveness, screened_aggregate_flat,
+    screened_aggregate_ref, screened_weights, trimmed_mean_flat,
+    trimmed_mean_ref, weighted_aggregate_ref)
+from repro.kernels.meta_update.ops import AGGREGATORS, robust_aggregate
+from repro.optim import adam
+from tests.test_async_engine import (ALGOS, EVAL, TRAIN, _TinyModel,
+                                     _fedmeta_history)
+
+N = 2048   # kernel plane width (multiple of 8*128)
+
+
+def _block(m=8, seed=0, n=N):
+    rng = np.random.RandomState(seed)
+    gs = rng.normal(0, 1, (m, n)).astype(np.float32)
+    w = rng.uniform(0.5, 2.0, (m,)).astype(np.float32)
+    return jnp.asarray(gs), jnp.asarray(w)
+
+
+# ---- FaultConfig: counts / pick ----------------------------------------
+
+def test_counts_static_and_capped():
+    assert FaultConfig(dropout=0.25).counts(8) == (2, 0, 0)
+    assert FaultConfig(dropout=0.25, nonfinite=0.125,
+                       byzantine=0.25).counts(8) == (2, 1, 2)
+    # overflow shaves byzantine -> nonfinite -> dropout, keeps >= 1 honest
+    assert FaultConfig(dropout=0.5, nonfinite=0.5,
+                       byzantine=0.5).counts(8) == (4, 3, 0)
+    assert FaultConfig().counts(8) == (0, 0, 0)
+
+
+def test_pick_deterministic_and_disjoint():
+    cfg = FaultConfig(dropout=0.25, nonfinite=0.125, byzantine=0.25, seed=7)
+    a = cfg.pick(8, np.random.RandomState(7))
+    b = cfg.pick(8, np.random.RandomState(7))
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    keep, nan_m, byz_m, _ = a
+    dropped = keep == 0.0
+    # roles are disjoint slices of one permutation
+    assert not np.any(dropped & nan_m) and not np.any(dropped & byz_m)
+    assert not np.any(nan_m & byz_m)
+    assert (int(dropped.sum()), int(nan_m.sum()),
+            int(byz_m.sum())) == cfg.counts(8)
+
+
+def test_pick_rng_draws_invariant_across_modes():
+    """Every config consumes the same rng draws, so fraction sweeps share
+    the underlying permutation (same clients fail as fractions grow)."""
+    r1, r2 = np.random.RandomState(3), np.random.RandomState(3)
+    FaultConfig(dropout=0.25).pick(8, r1)
+    FaultConfig(byzantine=0.25, nonfinite=0.125).pick(8, r2)
+    np.testing.assert_array_equal(r1.permutation(100), r2.permutation(100))
+
+
+def test_apply_faults_zero_config_is_identity():
+    cfg = FaultConfig()
+    gs, w = _block()
+    fault = cfg.pick(8, np.random.RandomState(0))
+    g2, w_agg, w_rep = apply_faults(cfg, gs, w, fault)
+    assert g2 is gs and w_agg is w and w_rep is w   # statically absent
+
+
+def test_apply_faults_modes():
+    gs, w = _block()
+    cfg = FaultConfig(dropout=0.25, nonfinite=0.125, byzantine=0.25,
+                      byzantine_scale=10.0)
+    keep, nan_m, byz_m, seed = cfg.pick(8, np.random.RandomState(1))
+    g2, w_agg, w_rep = apply_faults(
+        cfg, gs, w, tuple(map(jnp.asarray, (keep, nan_m, byz_m, seed))))
+    g2, w_agg, w_rep = map(np.asarray, (g2, w_agg, w_rep))
+    np.testing.assert_array_equal(w_agg, np.asarray(w) * keep)
+    assert np.isclose(w_rep.sum(), 1.0)              # renormalized
+    for i in range(8):
+        if nan_m[i]:
+            assert np.all(np.isnan(g2[i]))
+        elif byz_m[i]:
+            np.testing.assert_allclose(g2[i], -10.0 * np.asarray(gs)[i],
+                                       rtol=1e-6)
+        else:
+            np.testing.assert_array_equal(g2[i], np.asarray(gs)[i])
+
+
+def test_fault_validation():
+    with pytest.raises(ValueError):
+        FaultConfig(dropout=1.0)
+    with pytest.raises(ValueError):
+        FaultConfig(byzantine_mode="zeroed")
+
+
+# ---- masked mean: dropout renormalization ------------------------------
+
+def test_masked_mean_renormalizes_dropped_weight():
+    """Zeroing dropout rows' weights and renormalizing must equal the
+    weighted mean over survivors only — the effective weight sum stays
+    1 regardless of how many clients dropped (kernel == oracle)."""
+    gs, w = _block()
+    keep = jnp.asarray([1, 0, 1, 1, 0, 1, 1, 1], jnp.float32)
+    w_mask = w * keep
+    ref = masked_mean_ref(gs, w_mask)
+    ker = masked_mean_flat(gs, w_mask, interpret=True)
+    surv = np.asarray(w_mask) > 0
+    expect = (np.asarray(gs)[surv] * (np.asarray(w_mask)[surv] /
+              np.asarray(w_mask)[surv].sum())[:, None]).sum(0)
+    np.testing.assert_allclose(np.asarray(ref), expect, rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref), rtol=1e-5,
+                               atol=1e-6)
+    # effective weights sum to 1: aggregating all-ones rows returns ones
+    ones = jnp.ones_like(gs)
+    np.testing.assert_allclose(
+        np.asarray(masked_mean_flat(ones, w_mask, interpret=True)),
+        np.ones(N), rtol=1e-6)
+
+
+# ---- norm screening -----------------------------------------------------
+
+def test_screened_weights_clip_hand_check():
+    """A row at 100x the median norm is clipped back to factor * median
+    (weight scaled by thresh/norm); honest rows keep weight 1; non-finite
+    rows are rejected from numerator and denominator."""
+    m = 4
+    gs = np.ones((m, N), np.float32)
+    gs[1] *= 100.0                      # outlier
+    gs[2] = np.nan                      # divergent
+    w = np.ones((m,), np.float32)
+    w_num, w_den = map(np.asarray, screened_weights(
+        jnp.asarray(gs), jnp.asarray(w), factor=3.0))
+    norms = np.linalg.norm(gs, axis=1)
+    med = np.median([norms[0], norms[3]])   # live rows 0, 1, 3 -> lower med
+    assert np.isclose(w_num[0], 1.0) and np.isclose(w_num[3], 1.0)
+    assert np.isclose(w_num[1], 3.0 * med / norms[1], rtol=1e-5)
+    assert w_num[2] == 0.0 and w_den[2] == 0.0
+    assert np.isclose(w_den[1], 1.0)        # denominator is unclipped
+
+
+def test_screened_aggregate_kernel_matches_oracle():
+    gs, w = _block()
+    gs = gs.at[3].multiply(1000.0)          # adversarial magnitude
+    gs = gs.at[5].set(jnp.nan)              # divergent row
+    ref = screened_aggregate_ref(gs, w)
+    ker = screened_aggregate_flat(gs, w, interpret=True)
+    assert np.all(np.isfinite(np.asarray(ref)))
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref), rtol=1e-5,
+                               atol=1e-6)
+
+
+# ---- trimmed mean: kernel vs oracle ------------------------------------
+
+@pytest.mark.parametrize("trim", [1, 2])
+def test_trimmed_kernel_matches_oracle_adversarial(trim):
+    """Coordinate-wise trimmed mean under sign-flip x1000 adversarial rows
+    and a NaN row: kernel == NaN-sort oracle, and the adversarial values
+    never leak into the output (result stays within honest-row range)."""
+    gs, w = _block(m=8, seed=2)
+    gs = gs.at[1].multiply(-1000.0)
+    gs = gs.at[6].multiply(1000.0)
+    gs = gs.at[4].set(jnp.nan)
+    live = row_liveness(gs, w)
+    assert np.asarray(live).tolist() == [1, 1, 1, 1, 0, 1, 1, 1]
+    ref = trimmed_mean_ref(gs, live, trim=trim)
+    ker = trimmed_mean_flat(gs, live, trim=trim, interpret=True)
+    # absolute tolerance: summing then subtracting the +-1000x rows
+    # costs ~1e-4 abs in f32; near-zero coordinates make rtol meaningless
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref), rtol=0,
+                               atol=1e-3)
+    if trim == 2:
+        # both adversaries trimmed from either tail: the output stays
+        # within the honest-row range coordinate-wise (at trim=1 a
+        # coordinate where both adversarial values share a sign can
+        # legitimately leak one of them)
+        honest = np.asarray(gs)[[0, 2, 3, 5, 7]]
+        assert np.all(np.asarray(ref) <= honest.max(0) + 1e-3)
+        assert np.all(np.asarray(ref) >= honest.min(0) - 1e-3)
+
+
+def test_trimmed_hand_check():
+    """Columns [1, 3, 100, 5, 7], trim=1 -> drop 100 and 1, mean(3,5,7)=5;
+    with row 2 dead the window is [1,3,5,7], trim -> mean(3,5)=4."""
+    cols = np.tile(np.asarray([1, 3, 100, 5, 7], np.float32)[:, None],
+                   (1, N))
+    live = jnp.ones((5,), jnp.float32)
+    for fn in (trimmed_mean_ref,
+               lambda g, l, trim: trimmed_mean_flat(g, l, trim=trim,
+                                                    interpret=True)):
+        np.testing.assert_allclose(
+            np.asarray(fn(jnp.asarray(cols), live, trim=1)), 5.0, rtol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(fn(jnp.asarray(cols), live.at[2].set(0.0), trim=1)),
+            4.0, rtol=1e-6)
+
+
+def test_trimmed_degenerate_round_is_nonfinite():
+    """Too few live rows to trim (n_live <= 2*trim) must yield a
+    non-finite aggregate — the guard's skip signal, never a silent
+    garbage update."""
+    gs, w = _block(m=4)
+    live = jnp.asarray([1, 1, 0, 0], jnp.float32)
+    out = trimmed_mean_flat(gs, live, trim=1, interpret=True)
+    assert not np.all(np.isfinite(np.asarray(out)))
+
+
+def test_robust_aggregate_dispatch():
+    gs, w = _block()
+    for agg in AGGREGATORS:
+        xla = robust_aggregate(gs, w, aggregator=agg, impl="xla")
+        pal = robust_aggregate(gs, w, aggregator=agg,
+                               impl="pallas_interpret")
+        np.testing.assert_allclose(np.asarray(xla), np.asarray(pal),
+                                   rtol=1e-4, atol=1e-5)
+    # on a clean block, every aggregator is close to the plain mean
+    mean = np.asarray(weighted_aggregate_ref(gs, w / jnp.sum(w)))
+    masked = np.asarray(robust_aggregate(gs, w, aggregator="masked_mean",
+                                         impl="xla"))
+    np.testing.assert_allclose(masked, mean, rtol=1e-5, atol=1e-6)
+    with pytest.raises(ValueError):
+        robust_aggregate(gs, w, aggregator="median")
+
+
+# ---- guard: bitwise no-op on clean runs --------------------------------
+
+@pytest.mark.parametrize("algo_name", ALGOS)
+def test_guard_bitwise_noop_on_clean_run(algo_name):
+    """guard=True on a fault-free run must not perturb a single bit of
+    the trajectory — the only difference is the skipped=0.0 metric."""
+    base = _fedmeta_history(algo_name, packed=True)
+    guarded = _fedmeta_history(algo_name, packed=True, guard=True)
+    assert all(r.pop("skipped") == 0.0 for r in guarded)
+    assert guarded == base
+
+
+def test_zero_fraction_faults_bitwise_noop():
+    """FaultConfig with all fractions 0 (guard off) is bitwise identical
+    to no config at all: same task stream, same jitted graph numerics."""
+    base = _fedmeta_history("fomaml", packed=True)
+    off = _fedmeta_history("fomaml", packed=True, faults=FaultConfig(),
+                           guard=False)
+    assert off == base
+
+
+def test_guard_skips_poisoned_round_phi_untouched():
+    """All-NaN uploads with mean aggregation: every round is skipped, φ
+    and the Adam state never move, and history reports the skips."""
+    algo = make_algorithm("fomaml", classification_loss(_TinyModel.apply)[0],
+                          classification_loss(_TinyModel.apply)[1],
+                          inner_lr=0.05)
+    tr = FederatedTrainer(algo, adam(1e-3), TRAIN, 4, support_frac=0.5,
+                          support_size=8, query_size=8, seed=0, packed=True,
+                          faults=FaultConfig(nonfinite=0.5))
+    state = tr.init(jax.random.PRNGKey(0), _TinyModel.init)
+    phi0 = np.asarray(state["phi"]).copy()
+    state = tr.run(state, 4)
+    # nonfinite=0.5 of m=4 -> 2 NaN rows every round; mean is poisoned
+    assert [r["skipped"] for r in tr.history] == [1.0] * 4
+    np.testing.assert_array_equal(np.asarray(state["phi"]), phi0)
+    assert int(state["opt"]["step"]) == 0       # Adam step count untouched
+
+
+@pytest.mark.parametrize("aggregator", ["screen", "trimmed"])
+def test_robust_aggregators_absorb_faults(aggregator):
+    """Under dropout + Byzantine injection the robust aggregators keep
+    training: no skipped rounds, finite φ, full-length history."""
+    hist = _fedmeta_history(
+        "fomaml", packed=True, aggregator=aggregator, trim=1,
+        faults=FaultConfig(dropout=0.25, byzantine=0.25, seed=3))
+    assert len(hist) == 6
+    assert sum(r["skipped"] for r in hist) == 0.0
+
+
+def test_faults_compose_with_staleness_and_prefetch():
+    """faults x staleness x prefetch_depth: the pipelined run is bitwise
+    identical to the synchronous one under the same fault stream."""
+    kw = dict(packed=True,
+              staleness=StalenessConfig(delay=1, fraction=0.34,
+                                        discount=0.5),
+              faults=FaultConfig(dropout=0.25, seed=5))
+    sync = _fedmeta_history("fomaml", **kw)
+    piped = _fedmeta_history("fomaml", prefetch_depth=2, **kw)
+    assert piped == sync
+
+
+def test_fault_validation_in_trainer():
+    algo = make_algorithm("fomaml", *classification_loss(_TinyModel.apply),
+                          inner_lr=0.05)
+    with pytest.raises(ValueError):    # faults need the packed plane
+        FederatedTrainer(algo, adam(1e-3), TRAIN, 4, support_frac=0.5,
+                         support_size=8, query_size=8,
+                         faults=FaultConfig(dropout=0.25))
+    with pytest.raises(ValueError):    # unknown aggregator
+        FederatedTrainer(algo, adam(1e-3), TRAIN, 4, support_frac=0.5,
+                         support_size=8, query_size=8, packed=True,
+                         aggregator="median")
+    with pytest.raises(ValueError):    # 2*trim must be < clients_per_round
+        FederatedTrainer(algo, adam(1e-3), TRAIN, 4, support_frac=0.5,
+                         support_size=8, query_size=8, packed=True,
+                         aggregator="trimmed", trim=2)
+
+
+# ---- committed artifact pin --------------------------------------------
+
+def test_robustness_artifact_separation():
+    """The committed sweep must show the §14 story: at byzantine 0.25
+    plain mean collapses while screened/trimmed aggregation holds."""
+    path = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "experiments", "robustness_femnist.json")
+    with open(path) as f:
+        art = json.load(f)
+    byz = art["headline"]["byzantine_0.25"]
+    clean = art["headline"]["clean"]
+    # the committed run: mean 0.040 vs trimmed 0.124 / screen 0.130 —
+    # sign-flipped rows reverse the mean's aggregate (2 rows at -10x
+    # outweigh 6 honest rows) while trimming/screening reject them
+    assert byz["trimmed"] >= 2 * byz["mean"]
+    assert byz["screen"] >= 2 * byz["mean"]
+    # under attack the robust aggregators retain what clean mean
+    # training reaches (trimmed 0.124 vs clean mean 0.129)
+    assert byz["trimmed"] >= 0.75 * clean["mean"]
+    # and cost little when the population is clean
+    assert clean["trimmed"] >= clean["mean"] - 0.1
+    assert clean["screen"] >= clean["mean"] - 0.1

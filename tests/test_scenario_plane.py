@@ -175,8 +175,10 @@ def test_committed_artifacts_fairness_stable():
     """Every committed comparison artifact carries fairness blocks that
     re-derive EXACTLY from its stored per-client accuracies — the same
     pure-function pin as the PR-4 comm-to-target stability test."""
+    # *_compare.json only — the §14 robustness artifact has its own
+    # schema (pinned in tests/test_faults.py)
     paths = [os.path.join(ART_DIR, f) for f in sorted(os.listdir(ART_DIR))
-             if f.endswith(".json")]
+             if f.endswith("_compare.json")]
     assert paths, "committed experiment artifacts are missing"
     for path in paths:
         with open(path) as f:
