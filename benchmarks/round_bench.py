@@ -48,15 +48,31 @@ the best pipelined wall, at the large scale (DESIGN.md §12). The loop
 math is bit-identical across variants (tests/test_async_engine.py), so
 this is pure overlap/dispatch win.
 
+The third section (``population``) measures the PR 7 claim directly:
+a femnist population served lazily from an independent-mode
+`ClientRegistry` (O(1) per-client seeding, bounded LRU cache) through
+the population-plane trainer (over-selection + deadline + worker pool),
+at 10^3 / 10^4 / 10^5 clients. Each size runs in its OWN subprocess so
+``ru_maxrss`` — which is monotone within a process — is a true
+per-size peak; the recorded ``peak_rss_mb`` staying flat across three
+decades of population is the bounded-memory evidence, and
+``rounds_per_s`` shows round throughput is population-size independent.
+``--population-only`` re-runs just this section and MERGES it into an
+existing BENCH_round.json without touching the other sections' numbers.
+
 Usage:
   PYTHONPATH=src python benchmarks/round_bench.py            # full
   PYTHONPATH=src python benchmarks/round_bench.py --dry-run  # CI smoke
+  PYTHONPATH=src python benchmarks/round_bench.py --population-only
 Emits results/bench/BENCH_round.json (see --out).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
 import time
 
 import numpy as np
@@ -154,6 +170,97 @@ def _bench_async(scale_key: str, reps: int):
     return rows
 
 
+POPULATION_SIZES = (1_000, 10_000, 100_000)
+POPULATION_SIZES_DRY = (200, 1_000)
+
+
+def _population_child(n_clients: int, rounds: int, cache: int) -> dict:
+    """One population size, measured in THIS process (spawned as a
+    subprocess so ru_maxrss is a per-size peak): 20-round femnist
+    population-plane run off the independent-mode lazy registry."""
+    import resource
+
+    import jax
+
+    from repro.core import classification_loss, make_algorithm
+    from repro.federated.experiment import DATASETS
+    from repro.federated.population import UnreliabilityConfig
+    from repro.federated.server import FederatedTrainer
+    from repro.optim import adam
+
+    su = DATASETS["femnist"]
+    reg = su["data"](n_clients, 0, lazy=True, independent=True,
+                     cache_clients=cache)
+    train, _, _ = reg.split_clients(seed=0)
+    model = su["model"]()
+    algo = make_algorithm("fomaml", *classification_loss(model.apply),
+                          inner_lr=0.05)
+    tr = FederatedTrainer(
+        algo, adam(1e-3), train, 8, support_frac=0.2, support_size=16,
+        query_size=16, seed=0, packed=True,
+        unreliability=UnreliabilityConfig(fail_rate=0.2, seed=0),
+        over_select=0.5, round_deadline=1.6, pool_workers=2)
+    state = tr.init(jax.random.PRNGKey(0), model.init)
+    state = tr.run(state, 2)              # compile outside the timing
+    t0 = time.perf_counter()
+    tr.run(state, rounds)
+    wall = time.perf_counter() - t0
+    return {
+        "clients": n_clients, "rounds": rounds,
+        "rounds_per_s": rounds / wall,
+        "wall_s": wall,
+        "peak_rss_mb": resource.getrusage(
+            resource.RUSAGE_SELF).ru_maxrss / 1024.0,
+        "arrived_total": tr.history[-1]["arrived_total"],
+        "selected_total": tr.history[-1]["selected_total"],
+        "cache": reg.cache_stats(),
+    }
+
+
+def _bench_population(dry: bool):
+    """Spawn one subprocess per population size (fresh ru_maxrss each)
+    and collect the per-size rows."""
+    sizes = POPULATION_SIZES_DRY if dry else POPULATION_SIZES
+    rounds, cache = (3, 32) if dry else (20, 64)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (env.get("PYTHONPATH", ""),
+                    os.path.dirname(os.path.dirname(
+                        os.path.abspath(__file__)))) if p)
+    rows = []
+    for n in sizes:
+        proc = subprocess.run(
+            [sys.executable, os.path.abspath(__file__),
+             "--population-child", str(n), "--population-rounds",
+             str(rounds), "--population-cache", str(cache)],
+            capture_output=True, text=True, env=env, check=False)
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"population child (n={n}) failed:\n{proc.stderr[-2000:]}")
+        row = json.loads(proc.stdout.strip().splitlines()[-1])
+        rows.append(row)
+        print(f"round.population.{n},rounds_per_s="
+              f"{row['rounds_per_s']:.2f},peak_rss_mb="
+              f"{row['peak_rss_mb']:.0f},peak_resident="
+              f"{row['cache']['peak_resident']}", flush=True)
+    return rows
+
+
+def _summarize_population(pop_rows):
+    if not pop_rows:
+        return {}
+    lo, hi = pop_rows[0], pop_rows[-1]
+    return {"population": {
+        "max_clients": hi["clients"],
+        "rounds_per_s_at_max": hi["rounds_per_s"],
+        "peak_rss_mb_at_max": hi["peak_rss_mb"],
+        # bounded-memory evidence: RSS growth across the population
+        # decades (≈1.0 = resident set independent of fleet size)
+        "rss_growth_vs_smallest": hi["peak_rss_mb"] / lo["peak_rss_mb"],
+        "cache_peak_resident": hi["cache"]["peak_resident"],
+    }}
+
+
 def run(*, dry: bool = False, reps: int = 10, algo_name: str = "fomaml",
         json_out: str = "results/bench/BENCH_round.json"):
     import jax
@@ -224,6 +331,7 @@ def run(*, dry: bool = False, reps: int = 10, algo_name: str = "fomaml",
 
     async_rows = _bench_async("tiny" if dry else "large",
                               reps=1 if dry else 2)
+    pop_rows = _bench_population(dry)
 
     report = {
         "bench": "round",
@@ -233,11 +341,31 @@ def run(*, dry: bool = False, reps: int = 10, algo_name: str = "fomaml",
         "reps": reps,
         "rows": rows,
         "async_rows": async_rows,
-        "summary": _summarize(rows, async_rows),
+        "population_rows": pop_rows,
+        "summary": {**_summarize(rows, async_rows),
+                    **_summarize_population(pop_rows)},
     }
     with open(json_out, "w") as f:
         json.dump(report, f, indent=2)
     print(f"wrote {json_out}", flush=True)
+    return report
+
+
+def run_population_only(*, dry: bool = False, json_out: str):
+    """Run just the population section and merge it into an existing
+    report (the other sections' committed numbers are left untouched)."""
+    pop_rows = _bench_population(dry)
+    report = {"bench": "round", "dry_run": dry, "summary": {}}
+    if os.path.exists(json_out):
+        with open(json_out) as f:
+            report = json.load(f)
+    report["population_rows"] = pop_rows
+    report.setdefault("summary", {}).update(
+        _summarize_population(pop_rows))
+    os.makedirs(os.path.dirname(json_out) or ".", exist_ok=True)
+    with open(json_out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {json_out} (population section merged)", flush=True)
     return report
 
 
@@ -324,6 +452,15 @@ def main():
                     help="tiny scale, 1 rep — CI smoke")
     ap.add_argument("--reps", type=int, default=10)
     ap.add_argument("--algo", default="fomaml")
+    ap.add_argument("--population-only", action="store_true",
+                    help="run just the population-scaling section and "
+                         "merge it into the existing --out report")
+    ap.add_argument("--population-child", type=int, default=0,
+                    help=argparse.SUPPRESS)   # internal: subprocess mode
+    ap.add_argument("--population-rounds", type=int, default=20,
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--population-cache", type=int, default=64,
+                    help=argparse.SUPPRESS)
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host CPU devices (sets XLA_FLAGS; must "
                          "run before jax is imported — match the "
@@ -337,6 +474,14 @@ def main():
     if args.out is None:
         args.out = ("results/bench/BENCH_round_smoke.json" if args.dry_run
                     else "results/bench/BENCH_round.json")
+    if args.population_child:
+        print(json.dumps(_population_child(
+            args.population_child, args.population_rounds,
+            args.population_cache)), flush=True)
+        return
+    if args.population_only:
+        run_population_only(dry=args.dry_run, json_out=args.out)
+        return
     if args.devices:
         import os
         import sys

@@ -56,6 +56,28 @@ def main():
                     help="fraction of Byzantine (sign-flip) clients")
     ap.add_argument("--fault-nonfinite", type=float, default=0.0,
                     help="fraction of clients uploading NaN gradients")
+    ap.add_argument("--lazy-population", action="store_true",
+                    help="serve clients from the lazy ClientRegistry "
+                         "(sequential mode: bit-identical to eager)")
+    ap.add_argument("--cache-clients", type=int, default=0,
+                    help="LRU cap on resident lazy clients (0 = "
+                         "unbounded)")
+    ap.add_argument("--over-select", type=float, default=0.0,
+                    help="sample m·(1+x) candidates per round, "
+                         "aggregate the first m arrivals (FedMeta "
+                         "methods; needs a packed pipeline)")
+    ap.add_argument("--round-deadline", type=float, default=0.0,
+                    help="arrival latency cutoff, in unreliability "
+                         "units (0 = no deadline)")
+    ap.add_argument("--unreliable-fail-rate", type=float, default=0.0,
+                    help="per-(client, round) transient failure "
+                         "probability of the arrival model")
+    ap.add_argument("--pool-workers", type=int, default=0,
+                    help="shard-materializing worker threads "
+                         "(0 = inline)")
+    ap.add_argument("--eval-clients-cap", type=int, default=0,
+                    help="cap on val/test eval cohort size (large lazy "
+                         "populations)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--outdir", default="results/experiments")
     ap.add_argument("--dry-run", action="store_true",
@@ -75,6 +97,21 @@ def main():
         over["faults"] = FaultConfig(dropout=args.fault_dropout,
                                      byzantine=args.fault_byzantine,
                                      nonfinite=args.fault_nonfinite)
+    if args.lazy_population:
+        over.update(lazy_population=True,
+                    cache_clients=args.cache_clients or None)
+    if args.over_select:
+        over["over_select"] = args.over_select
+    if args.round_deadline:
+        over["round_deadline"] = args.round_deadline
+    if args.unreliable_fail_rate:
+        from repro.federated.population import UnreliabilityConfig
+        over["unreliability"] = UnreliabilityConfig(
+            fail_rate=args.unreliable_fail_rate, seed=args.seed)
+    if args.pool_workers:
+        over["pool_workers"] = args.pool_workers
+    if args.eval_clients_cap:
+        over["eval_clients_cap"] = args.eval_clients_cap
     if args.clients:
         over["num_clients"] = args.clients
     if args.support_frac is not None:

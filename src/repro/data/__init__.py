@@ -1,6 +1,10 @@
 from repro.data.federated import (ClientData, FederatedDataset, TaskBatch,
-                                  TaskStream, sample_task_batch,
-                                  stack_task_batches)
+                                  TaskStream, assemble_task_batch,
+                                  sample_task_batch, stack_task_batches)
+from repro.data.registry import (ClientRegistry, IndependentClientSource,
+                                 RegistryView, SequentialClientSource,
+                                 ShardIndexSource, load_shard_registry,
+                                 registry_from_body, save_shards)
 from repro.data.synth_femnist import make_femnist
 from repro.data.synth_shakespeare import make_shakespeare
 from repro.data.synth_sent140 import make_sent140

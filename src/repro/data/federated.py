@@ -173,3 +173,47 @@ def sample_task_batch(clients: list[ClientData], m: int, support_frac: float,
     w = np.asarray(w, np.float32)
     return TaskBatch(np.stack(sx), np.stack(sy), np.stack(qx), np.stack(qy),
                      w / w.sum(), np.asarray(qc, np.int64))
+
+
+def assemble_task_batch(shards, m: int, support_frac: float,
+                        support_size: int, query_size: int,
+                        rng: np.random.RandomState,
+                        weighted: bool = True, probe=None) -> TaskBatch:
+    """Fixed-shape TaskBatch from pre-picked *arrived* client shards,
+    zero-weight padded to ``m`` rows (the population plane's partial
+    round, DESIGN.md §15).
+
+    The first ``len(shards)`` rows are the arrived clients in arrival
+    order, weighted by data count (or uniformly with ``weighted=False``)
+    and renormalized over the arrived set; the remaining rows are copies
+    of row 0 with weight 0 — `masked_mean` aggregation (Σ w·g / Σ w over
+    w > 0 rows) makes them exact no-ops in-graph, and the weighted
+    metrics reduction ignores them for the same reason. An empty arrived
+    set (``probe`` supplies the row shapes — any client of the same
+    dataset) yields an all-zero weight vector: the step's weight
+    normalization then goes non-finite and the guard skips the round —
+    the designed all-candidates-failed behavior.
+    """
+    a = len(shards)
+    if a > m:
+        raise ValueError(f"need at most {m} arrived shards, got {a}")
+    if a == 0 and probe is None:
+        raise ValueError("empty arrived set needs a shape probe client")
+    sx, sy, qx, qy, w, qc = [], [], [], [], [], []
+    for c in (shards if a else [probe]):
+        (s_x, s_y), (q_x, q_y) = support_query_split(c, support_frac, rng)
+        qc.append(len(q_y))
+        s_x, s_y = _resample_to(s_x, s_y, support_size, rng)
+        q_x, q_y = _resample_to(q_x, q_y, query_size, rng)
+        sx.append(s_x); sy.append(s_y); qx.append(q_x); qy.append(q_y)
+        w.append(c.n if weighted else 1.0)
+    if a == 0:                   # probe row is itself a zero-weight pad
+        w[0] = 0.0; qc[0] = 0
+    for _ in range(m - max(a, 1)):  # zero-weight pads (copies of row 0)
+        sx.append(sx[0]); sy.append(sy[0])
+        qx.append(qx[0]); qy.append(qy[0])
+        w.append(0.0); qc.append(0)
+    w = np.asarray(w, np.float32)
+    s = w.sum()
+    return TaskBatch(np.stack(sx), np.stack(sy), np.stack(qx), np.stack(qy),
+                     w / s if s > 0 else w, np.asarray(qc, np.int64))

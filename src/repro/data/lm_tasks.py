@@ -67,8 +67,20 @@ def _dialect_perm(rng, vocab):
     return perm
 
 
+def _lm_client(mean_seqs, seq_len, vocab, rng):
+    """One client's dialect corpus — the per-client generator body."""
+    from repro.data.federated import ClientData
+    perm = _dialect_perm(rng, vocab)
+    n = mean_seqs + rng.randint(mean_seqs)
+    seqs = np.stack([perm[_sample_stream(rng, seq_len, vocab)]
+                     for _ in range(n)]).astype(np.int32)
+    return ClientData(seqs, seqs[:, -1].copy())
+
+
 def make_lm_clients(num_clients: int = 32, mean_seqs: int = 24,
-                    seq_len: int = 16, vocab: int = 64, seed: int = 0):
+                    seq_len: int = 16, vocab: int = 64, seed: int = 0,
+                    *, lazy: bool = False, independent: bool = False,
+                    cache_clients=None):
     """Per-client dialect corpora as a `FederatedDataset`.
 
     Each client holds ``n`` token sequences of its own dialect as local
@@ -78,14 +90,21 @@ def make_lm_clients(num_clients: int = 32, mean_seqs: int = 24,
     federated batch plumbing carries (x, y) pairs). ``n`` varies per
     client in [mean_seqs, 2*mean_seqs) so data-count weighting and true
     query counts are exercised like every other dataset.
+
+    ``lazy=True`` returns a `ClientRegistry` over the same body (see
+    data/registry.py for the sequential/independent semantics).
     """
-    from repro.data.federated import ClientData, FederatedDataset
+    from repro.data.federated import FederatedDataset
     rng = np.random.RandomState(seed)
-    clients = []
-    for _ in range(num_clients):
-        perm = _dialect_perm(rng, vocab)
-        n = mean_seqs + rng.randint(mean_seqs)
-        seqs = np.stack([perm[_sample_stream(rng, seq_len, vocab)]
-                         for _ in range(n)]).astype(np.int32)
-        clients.append(ClientData(seqs, seqs[:, -1].copy()))
+
+    def body(r):
+        return _lm_client(mean_seqs, seq_len, vocab, r)
+
+    if lazy:
+        from repro.data.registry import registry_from_body
+        return registry_from_body(body, num_clients, vocab,
+                                  "synth-lm-dialects", rng=rng, seed=seed,
+                                  independent=independent,
+                                  cache_clients=cache_clients)
+    clients = [body(rng) for _ in range(num_clients)]
     return FederatedDataset(clients, vocab, name="synth-lm-dialects")

@@ -1,0 +1,346 @@
+"""Lazy client registry: bounded-memory federated populations.
+
+`FederatedDataset` materializes every client up front — fine at the
+repo's experiment scales (~10^2 clients), hopeless at the paper's
+deployment scale ("distributed networks of mobile devices", §1) where
+populations are 10^5–10^6 devices. `ClientRegistry` is the same
+Sequence-of-clients contract (`len()`, integer indexing — everything
+`sample_task_batch` and the evaluators consume) with clients
+synthesized *on demand* from a per-client source and held in a bounded
+LRU host cache, so resident memory is O(cache) instead of O(population).
+
+Three sources:
+
+  * `SequentialClientSource` — replays the eager generator's single
+    sequential `RandomState`: construction runs the generator once to
+    snapshot the rng state *before* each client (discarding the
+    arrays), and `get(i)` re-runs client i's body from its snapshot.
+    Every draw is the one the eager loop made, so a lazy dataset in
+    this mode is **bit-identical** to `FederatedDataset` at any scale
+    you could have materialized eagerly. Cost: one full generation
+    pass at construction plus ~2.5 KB of rng state per client — the
+    bit-identity mode for current scales, not the 10^6 mode.
+  * `IndependentClientSource` — seeds client i's rng O(1) from
+    `SeedSequence((seed, i))`: no construction pass, no per-client
+    state, arbitrary population sizes. The draws differ from the
+    sequential stream (there is no eager baseline at these scales to
+    be identical to); statistics match because the body is the same.
+  * `ShardIndexSource` — loads `client_%08d.npz` shards from an
+    on-disk index directory written by `save_shards` (the
+    pre-partitioned-corpus deployment shape).
+
+`split_clients` / `view` mirror the eager dataset: splits are
+`RegistryView`s (index views — nothing materializes), and views apply
+an order/size-preserving per-client transform lazily with the same
+n-preservation check `FederatedDataset.view` enforces.
+
+Thread safety: `__getitem__` is safe under concurrent access (the
+worker pool materializes shards from K threads); an in-flight map
+ensures a client is synthesized once even when K workers race for it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+from collections import OrderedDict
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.data.federated import ClientData, FederatedDataset
+
+
+def _seeded_rng(*entropy) -> np.random.RandomState:
+    """O(1) per-client RandomState from a SeedSequence entropy tuple."""
+    return np.random.RandomState(
+        np.random.MT19937(np.random.SeedSequence(entropy)))
+
+
+class SequentialClientSource:
+    """Bit-identical lazy source: per-client rng-state snapshots of the
+    eager generator's sequential stream (see module docstring)."""
+
+    def __init__(self, body: Callable, num_clients: int,
+                 rng: np.random.RandomState, warm: Callable = None):
+        self._body = body
+        self.num_clients = num_clients
+        self._snaps = []
+        for i in range(num_clients):
+            self._snaps.append(rng.get_state())
+            c = body(rng)          # advance the stream exactly as eager
+            if warm is not None:
+                warm(i, c)         # don't waste the construction pass
+
+    def get(self, i: int) -> ClientData:
+        rng = np.random.RandomState()
+        rng.set_state(self._snaps[i])
+        return self._body(rng)
+
+
+class IndependentClientSource:
+    """O(1) lazy source: client i's rng is seeded from
+    `SeedSequence((seed, i))` — no construction pass, 10^5–10^6 scale.
+    Not bit-identical to the eager sequential stream (documented)."""
+
+    def __init__(self, body: Callable, num_clients: int, seed: int):
+        self._body = body
+        self.num_clients = num_clients
+        self.seed = seed
+
+    def get(self, i: int) -> ClientData:
+        return self._body(_seeded_rng(self.seed, i))
+
+
+class ShardIndexSource:
+    """On-disk shard index: `client_%08d.npz` files + `index.json`
+    written by `save_shards`."""
+
+    def __init__(self, shard_dir: str):
+        self.shard_dir = shard_dir
+        with open(os.path.join(shard_dir, "index.json")) as f:
+            self.index = json.load(f)
+        self.num_clients = int(self.index["num_clients"])
+
+    def get(self, i: int) -> ClientData:
+        path = os.path.join(self.shard_dir, f"client_{i:08d}.npz")
+        with np.load(path) as z:
+            return ClientData(z["x"], z["y"])
+
+
+class ClientRegistry:
+    """Lazy client population behind a bounded, thread-safe LRU cache.
+
+    Sequence protocol: ``len(reg)`` and ``reg[i]`` (negative indices
+    and slices work; a slice is a `RegistryView`, nothing materializes).
+    ``cache_clients=None`` means unbounded (every touched client stays
+    resident — the eager-equivalent memory mode); an integer bounds the
+    resident set and `cache_stats()["peak_resident"]` proves it.
+    """
+
+    def __init__(self, source, num_classes: int, name: str = "registry",
+                 cache_clients: Optional[int] = None):
+        if cache_clients is not None and cache_clients < 1:
+            raise ValueError("cache_clients must be >= 1 (or None)")
+        self._source = source
+        self.num_classes = num_classes
+        self.name = name
+        self.cache_clients = cache_clients
+        self._cache: OrderedDict = OrderedDict()
+        self._lock = threading.Lock()
+        self._inflight: dict = {}
+        self._hits = self._misses = self._evictions = 0
+        self._peak = 0
+
+    def __len__(self) -> int:
+        return self._source.num_clients
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return RegistryView(self, range(*i.indices(len(self))))
+        i = int(i)
+        if i < 0:
+            i += len(self)
+        if not 0 <= i < len(self):
+            raise IndexError(i)
+        while True:
+            with self._lock:
+                if i in self._cache:
+                    self._hits += 1
+                    self._cache.move_to_end(i)
+                    return self._cache[i]
+                ev = self._inflight.get(i)
+                if ev is None:
+                    self._inflight[i] = threading.Event()
+                    self._misses += 1
+                    break
+            ev.wait()          # another thread is synthesizing client i
+        try:
+            c = self._source.get(i)
+        except BaseException:
+            with self._lock:
+                self._inflight.pop(i).set()
+            raise
+        self._insert(i, c)
+        return c
+
+    def _insert(self, i: int, c: ClientData):
+        with self._lock:
+            self._cache[i] = c
+            self._cache.move_to_end(i)
+            cap = self.cache_clients
+            while cap is not None and len(self._cache) > cap:
+                self._cache.popitem(last=False)
+                self._evictions += 1
+            self._peak = max(self._peak, len(self._cache))
+            ev = self._inflight.pop(i, None)
+            if ev is not None:
+                ev.set()
+
+    def cache_stats(self) -> dict:
+        with self._lock:
+            return {"hits": self._hits, "misses": self._misses,
+                    "evictions": self._evictions,
+                    "resident": len(self._cache),
+                    "peak_resident": self._peak,
+                    "cache_clients": self.cache_clients}
+
+    def split_clients(self, seed: int = 0,
+                      fractions: Sequence[float] = (0.8, 0.1, 0.1)):
+        """Same 80/10/10 permutation math as `FederatedDataset` — the
+        SAME seed yields the same client-index split, as index views."""
+        rng = np.random.RandomState(seed)
+        idx = rng.permutation(len(self))
+        n = len(idx)
+        n_train = int(fractions[0] * n)
+        n_val = int(fractions[1] * n)
+        return (RegistryView(self, idx[:n_train].tolist()),
+                RegistryView(self, idx[n_train:n_train + n_val].tolist()),
+                RegistryView(self, idx[n_train + n_val:].tolist()))
+
+    def view(self, transform, num_classes: Optional[int] = None,
+             name: Optional[str] = None) -> "RegistryView":
+        """Lazy analogue of `FederatedDataset.view`: the transform runs
+        per access, under the same n-preservation contract."""
+        return RegistryView(self, range(len(self)), transform=transform,
+                            num_classes=num_classes or self.num_classes,
+                            name=name or self.name)
+
+    def materialize(self) -> FederatedDataset:
+        """Eager snapshot (small populations / tests only)."""
+        return FederatedDataset([self[i] for i in range(len(self))],
+                                self.num_classes, name=self.name)
+
+    def stats(self, max_clients: Optional[int] = None) -> dict:
+        """`FederatedDataset.stats` over the first ``max_clients``
+        clients (None = all — materializes the population once)."""
+        k = len(self) if max_clients is None else min(max_clients,
+                                                     len(self))
+        ns = np.array([self[i].n for i in range(k)])
+        classes = np.array([len(np.unique(self[i].y)) for i in range(k)])
+        return {
+            "clients": len(self), "sampled": k,
+            "samples": int(ns.sum()), "classes": self.num_classes,
+            "samples_per_client_mean": float(ns.mean()),
+            "samples_per_client_std": float(ns.std()),
+            "classes_per_client_min": int(classes.min()),
+            "classes_per_client_max": int(classes.max()),
+        }
+
+
+class RegistryView:
+    """Index (+ optional transform) view of a `ClientRegistry` — the
+    lazy analogue of the eager split/view lists. Sequence protocol;
+    composes (`view` of a view chains transforms)."""
+
+    def __init__(self, base, indices, transform=None,
+                 num_classes: Optional[int] = None,
+                 name: Optional[str] = None):
+        self._base = base
+        self._indices = list(indices)
+        self._transform = transform
+        self.num_classes = num_classes or base.num_classes
+        self.name = name or getattr(base, "name", "registry-view")
+
+    def __len__(self) -> int:
+        return len(self._indices)
+
+    def __getitem__(self, j):
+        if isinstance(j, slice):
+            return RegistryView(self._base, self._indices[j],
+                                transform=self._transform,
+                                num_classes=self.num_classes,
+                                name=self.name)
+        c = self._base[self._indices[j]]
+        if self._transform is not None:
+            t = self._transform(c)
+            if t.n != c.n:
+                raise ValueError("view transform must preserve client "
+                                 f"sizes (got {t.n}, want {c.n})")
+            return t
+        return c
+
+    def view(self, transform, num_classes: Optional[int] = None,
+             name: Optional[str] = None) -> "RegistryView":
+        prev = self._transform
+
+        def chained(c):
+            if prev is not None:
+                t = prev(c)
+                if t.n != c.n:
+                    raise ValueError("view transform must preserve "
+                                     f"client sizes (got {t.n}, want "
+                                     f"{c.n})")
+                c = t
+            return transform(c)
+
+        return RegistryView(self._base, self._indices, transform=chained,
+                            num_classes=num_classes or self.num_classes,
+                            name=name or self.name)
+
+
+def registry_from_body(body: Callable, num_clients: int, num_classes: int,
+                       name: str, *, rng: np.random.RandomState = None,
+                       seed: int = 0, independent: bool = False,
+                       cache_clients: Optional[int] = None
+                       ) -> ClientRegistry:
+    """A `ClientRegistry` over a per-client generator body
+    ``body(rng) -> ClientData``.
+
+    ``independent=False`` (default) consumes ``rng`` sequentially for
+    bit-identity with the eager generator (the construction pass also
+    warms the cache, so small populations pay generation once, not
+    twice); ``independent=True`` seeds each client O(1) from ``seed``.
+    """
+    reg_ref: list = [None]
+
+    if independent:
+        src = IndependentClientSource(body, num_clients, seed)
+        reg = ClientRegistry(src, num_classes, name=name,
+                             cache_clients=cache_clients)
+    else:
+        if rng is None:
+            raise ValueError("sequential registry needs the generator's "
+                             "rng (independent=False)")
+
+        def warm(i, c):
+            if reg_ref[0] is not None:
+                reg_ref[0]._insert(i, c)
+
+        reg = ClientRegistry.__new__(ClientRegistry)
+        # init the cache machinery first so the construction pass can
+        # warm it through the same bounded insert path
+        ClientRegistry.__init__(
+            reg, None, num_classes, name=name, cache_clients=cache_clients)
+        reg_ref[0] = reg
+        reg._source = SequentialClientSource(body, num_clients, rng,
+                                             warm=warm)
+    return reg
+
+
+def save_shards(clients, out_dir: str, num_classes: int,
+                name: str = "shards") -> str:
+    """Write a Sequence of clients as an on-disk shard index
+    (`client_%08d.npz` + `index.json`); returns the index path."""
+    os.makedirs(out_dir, exist_ok=True)
+    n = len(clients)
+    for i in range(n):
+        c = clients[i]
+        np.savez(os.path.join(out_dir, f"client_{i:08d}.npz"),
+                 x=c.x, y=c.y)
+    path = os.path.join(out_dir, "index.json")
+    with open(path, "w") as f:
+        json.dump({"num_clients": n, "num_classes": num_classes,
+                   "name": name}, f)
+    return path
+
+
+def load_shard_registry(shard_dir: str,
+                        cache_clients: Optional[int] = None
+                        ) -> ClientRegistry:
+    """Open an on-disk shard index as a lazy `ClientRegistry`."""
+    src = ShardIndexSource(shard_dir)
+    return ClientRegistry(src, int(src.index["num_classes"]),
+                          name=str(src.index.get("name", "shards")),
+                          cache_clients=cache_clients)

@@ -52,29 +52,50 @@ def _affine_warp(img: np.ndarray, theta: float, shear: float, scale: float):
     return img[ys, xs]
 
 
+def _femnist_client(protos, num_classes, image_size, mean_samples,
+                    rng) -> ClientData:
+    """One writer's local shard — the per-client generator body (same
+    draw sequence the eager loop always made)."""
+    # writer style (fixed per client)
+    theta = rng.uniform(-0.5, 0.5)
+    shear = rng.uniform(-0.3, 0.3)
+    scale = rng.uniform(0.8, 1.2)
+    contrast = rng.uniform(0.7, 1.3)
+    bias = rng.uniform(-0.1, 0.1)
+    # skewed class subset: between ~15% and 100% of classes
+    k = rng.randint(max(2, num_classes // 7), num_classes + 1)
+    classes = rng.choice(num_classes, size=k, replace=False)
+    pvals = rng.dirichlet(np.ones(k) * 0.5)
+    n = int(np.clip(rng.lognormal(np.log(mean_samples), 0.4), 8, 4 * mean_samples))
+    ys = classes[rng.choice(k, size=n, p=pvals)]
+    xs = np.zeros((n, image_size, image_size), np.float32)
+    for i, y in enumerate(ys):
+        img = _affine_warp(protos[y], theta, shear, scale)
+        img = np.clip(contrast * img + bias + rng.normal(0, 0.15, img.shape), 0, 1)
+        xs[i] = img
+    return ClientData(xs.astype(np.float32), ys.astype(np.int32))
+
+
 def make_femnist(num_clients: int = 120, num_classes: int = 62,
                  image_size: int = 28, mean_samples: int = 80,
-                 seed: int = 0) -> FederatedDataset:
+                 seed: int = 0, *, lazy: bool = False,
+                 independent: bool = False, cache_clients=None):
+    """Eager `FederatedDataset` (default) or, with ``lazy=True``, a
+    `ClientRegistry` over the same generator body: sequential mode
+    (``independent=False``) is bit-identical to eager; independent mode
+    seeds clients O(1) for 10^5+ populations (data/registry.py)."""
     rng = np.random.RandomState(seed)
     protos = _class_prototypes(num_classes, image_size, rng)
-    clients = []
-    for _ in range(num_clients):
-        # writer style (fixed per client)
-        theta = rng.uniform(-0.5, 0.5)
-        shear = rng.uniform(-0.3, 0.3)
-        scale = rng.uniform(0.8, 1.2)
-        contrast = rng.uniform(0.7, 1.3)
-        bias = rng.uniform(-0.1, 0.1)
-        # skewed class subset: between ~15% and 100% of classes
-        k = rng.randint(max(2, num_classes // 7), num_classes + 1)
-        classes = rng.choice(num_classes, size=k, replace=False)
-        pvals = rng.dirichlet(np.ones(k) * 0.5)
-        n = int(np.clip(rng.lognormal(np.log(mean_samples), 0.4), 8, 4 * mean_samples))
-        ys = classes[rng.choice(k, size=n, p=pvals)]
-        xs = np.zeros((n, image_size, image_size), np.float32)
-        for i, y in enumerate(ys):
-            img = _affine_warp(protos[y], theta, shear, scale)
-            img = np.clip(contrast * img + bias + rng.normal(0, 0.15, img.shape), 0, 1)
-            xs[i] = img
-        clients.append(ClientData(xs.astype(np.float32), ys.astype(np.int32)))
+
+    def body(r):
+        return _femnist_client(protos, num_classes, image_size,
+                               mean_samples, r)
+
+    if lazy:
+        from repro.data.registry import registry_from_body
+        return registry_from_body(body, num_clients, num_classes,
+                                  "synth-femnist", rng=rng, seed=seed,
+                                  independent=independent,
+                                  cache_clients=cache_clients)
+    clients = [body(rng) for _ in range(num_clients)]
     return FederatedDataset(clients, num_classes, name="synth-femnist")

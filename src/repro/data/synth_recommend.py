@@ -23,40 +23,56 @@ import numpy as np
 from repro.data.federated import ClientData, FederatedDataset
 
 
+def _recommend_client(U, V, num_services, ctx_dim, mean_records, rank,
+                      rng) -> ClientData:
+    """One user's usage-record shard — the per-client generator body."""
+    feat_dim = ctx_dim + num_services
+    k = rng.randint(2, 37)  # 2..36 services per client (paper)
+    services = rng.choice(num_services, size=k, replace=False)
+    # personal taste: client-specific mixing in the shared rank space
+    taste = rng.normal(0, 1, size=(rank,)).astype(np.float32)
+    n = int(np.clip(rng.lognormal(np.log(mean_records), 0.5), 30,
+                    10 * mean_records))
+    ctx = rng.normal(0, 1, size=(n, ctx_dim)).astype(np.float32)
+    # affinity over this client's services only
+    logits = (ctx @ U * taste) @ V[:, services]  # (n, k)
+    # markov-ish: also condition on last service via a recency boost
+    ys_local = np.zeros(n, np.int64)
+    last = rng.randint(k)
+    for i in range(n):
+        l = logits[i].copy()
+        l[last] += 1.0  # recency
+        p = np.exp(l - l.max()); p /= p.sum()
+        ys_local[i] = rng.choice(k, p=p)
+        last = ys_local[i]
+    ys = services[ys_local]
+    x = np.zeros((n, feat_dim), np.float32)
+    x[:, :ctx_dim] = ctx
+    lasts = np.concatenate([[services[rng.randint(k)]], ys[:-1]])
+    x[np.arange(n), ctx_dim + lasts] = 1.0
+    return ClientData(x, ys.astype(np.int32))
+
+
 def make_recommend(num_clients: int = 200, num_services: int = 120,
                    ctx_dim: int = 24, mean_records: int = 160,
-                   rank: int = 8, seed: int = 0) -> FederatedDataset:
+                   rank: int = 8, seed: int = 0, *, lazy: bool = False,
+                   independent: bool = False, cache_clients=None):
     rng = np.random.RandomState(seed)
     # shared low-rank structure: context -> service affinity
     U = rng.normal(0, 1, size=(ctx_dim, rank)).astype(np.float32)
     V = rng.normal(0, 1, size=(rank, num_services)).astype(np.float32)
-    feat_dim = ctx_dim + num_services
-    clients = []
-    for _ in range(num_clients):
-        k = rng.randint(2, 37)  # 2..36 services per client (paper)
-        services = rng.choice(num_services, size=k, replace=False)
-        # personal taste: client-specific mixing in the shared rank space
-        taste = rng.normal(0, 1, size=(rank,)).astype(np.float32)
-        n = int(np.clip(rng.lognormal(np.log(mean_records), 0.5), 30,
-                        10 * mean_records))
-        ctx = rng.normal(0, 1, size=(n, ctx_dim)).astype(np.float32)
-        # affinity over this client's services only
-        logits = (ctx @ U * taste) @ V[:, services]  # (n, k)
-        # markov-ish: also condition on last service via a recency boost
-        ys_local = np.zeros(n, np.int64)
-        last = rng.randint(k)
-        for i in range(n):
-            l = logits[i].copy()
-            l[last] += 1.0  # recency
-            p = np.exp(l - l.max()); p /= p.sum()
-            ys_local[i] = rng.choice(k, p=p)
-            last = ys_local[i]
-        ys = services[ys_local]
-        x = np.zeros((n, feat_dim), np.float32)
-        x[:, :ctx_dim] = ctx
-        lasts = np.concatenate([[services[rng.randint(k)]], ys[:-1]])
-        x[np.arange(n), ctx_dim + lasts] = 1.0
-        clients.append(ClientData(x, ys.astype(np.int32)))
+
+    def body(r):
+        return _recommend_client(U, V, num_services, ctx_dim,
+                                 mean_records, rank, r)
+
+    if lazy:
+        from repro.data.registry import registry_from_body
+        return registry_from_body(body, num_clients, num_services,
+                                  "synth-recommend", rng=rng, seed=seed,
+                                  independent=independent,
+                                  cache_clients=cache_clients)
+    clients = [body(rng) for _ in range(num_clients)]
     return FederatedDataset(clients, num_services, name="synth-recommend")
 
 
@@ -87,7 +103,15 @@ def localize_clients(clients, head_size: int = 40):
     seeded sampling streams identical to the global view (the §11 shared-
     stream discipline). Raises if any client uses more than ``head_size``
     services.
+
+    Polymorphic over eager and lazy populations: a list materializes
+    the localized view; a `ClientRegistry`/`RegistryView` gets a lazy
+    transform view (the remap runs per access, nothing materializes).
     """
+    from repro.data.registry import ClientRegistry, RegistryView
+    if isinstance(clients, (ClientRegistry, RegistryView)):
+        return clients.view(lambda c: _localize_one(c, head_size),
+                            num_classes=head_size)
     return [_localize_one(c, head_size) for c in clients]
 
 

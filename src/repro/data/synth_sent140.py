@@ -21,28 +21,46 @@ import numpy as np
 from repro.data.federated import ClientData, FederatedDataset
 
 
+def _sent140_client(word_score, base, vocab, seq_len, mean_samples,
+                    rng) -> ClientData:
+    """One user's tweet shard — the per-client generator body."""
+    # mild topical skew over a broad distribution (every client covers
+    # the shared vocabulary; nothing is memorizable per client)
+    topic = 0.5 * base + 0.5 * rng.dirichlet(np.ones(vocab) * 2.0)
+    # strong, adaptation-learnable personal decision bias
+    user_bias = rng.normal(0, 1.2)
+    # small sarcasm subset (flipped polarity words)
+    flip = np.ones(vocab, np.float32)
+    n_flip = rng.randint(0, vocab // 20)
+    flip[rng.choice(vocab, size=n_flip, replace=False)] = -1.0
+    n = int(np.clip(rng.lognormal(np.log(mean_samples), 0.6), 10,
+                    6 * mean_samples))
+    xs = rng.choice(vocab, size=(n, seq_len), p=topic).astype(np.int32)
+    score = ((word_score[xs] * flip[xs]).sum(axis=1) / np.sqrt(seq_len)
+             + user_bias)
+    ys = (score > 0).astype(np.int32)
+    return ClientData(xs, ys)
+
+
 def make_sent140(num_clients: int = 150, seq_len: int = 25,
                  vocab: int = 2000, mean_samples: int = 45,
-                 seed: int = 0) -> FederatedDataset:
+                 seed: int = 0, *, lazy: bool = False,
+                 independent: bool = False, cache_clients=None):
+    """Eager dataset (default) or lazy `ClientRegistry` (see
+    make_femnist for the lazy/independent semantics)."""
     rng = np.random.RandomState(seed)
     word_score = rng.normal(0, 1, size=vocab).astype(np.float32)
     base = np.ones(vocab) / vocab
-    clients = []
-    for _ in range(num_clients):
-        # mild topical skew over a broad distribution (every client covers
-        # the shared vocabulary; nothing is memorizable per client)
-        topic = 0.5 * base + 0.5 * rng.dirichlet(np.ones(vocab) * 2.0)
-        # strong, adaptation-learnable personal decision bias
-        user_bias = rng.normal(0, 1.2)
-        # small sarcasm subset (flipped polarity words)
-        flip = np.ones(vocab, np.float32)
-        n_flip = rng.randint(0, vocab // 20)
-        flip[rng.choice(vocab, size=n_flip, replace=False)] = -1.0
-        n = int(np.clip(rng.lognormal(np.log(mean_samples), 0.6), 10,
-                        6 * mean_samples))
-        xs = rng.choice(vocab, size=(n, seq_len), p=topic).astype(np.int32)
-        score = ((word_score[xs] * flip[xs]).sum(axis=1) / np.sqrt(seq_len)
-                 + user_bias)
-        ys = (score > 0).astype(np.int32)
-        clients.append(ClientData(xs, ys))
+
+    def body(r):
+        return _sent140_client(word_score, base, vocab, seq_len,
+                               mean_samples, r)
+
+    if lazy:
+        from repro.data.registry import registry_from_body
+        return registry_from_body(body, num_clients, 2, "synth-sent140",
+                                  rng=rng, seed=seed,
+                                  independent=independent,
+                                  cache_clients=cache_clients)
+    clients = [body(rng) for _ in range(num_clients)]
     return FederatedDataset(clients, 2, name="synth-sent140")

@@ -27,7 +27,8 @@ def _row_normalize(m):
 
 def make_shakespeare(num_clients: int = 60, seq_len: int = 40,
                      mean_samples: int = 300, vocab: int = VOCAB,
-                     seed: int = 0) -> FederatedDataset:
+                     seed: int = 0, *, lazy: bool = False,
+                     independent: bool = False, cache_clients=None):
     rng = np.random.RandomState(seed)
     # global language: peaked Markov chain (natural text is highly
     # predictable per-char; a flat chain caps top-1 accuracy ~14% which is
@@ -40,24 +41,38 @@ def make_shakespeare(num_clients: int = 60, seq_len: int = 40,
         peaks = rng.choice(vocab, size=k, replace=False)
         base[r, peaks] += rng.dirichlet(np.ones(k)) * 6.0
     base = _row_normalize(base)
-    clients = []
-    for _ in range(num_clients):
-        # role voice: boost a random subset of transitions
-        voice = base.copy()
-        k = rng.randint(5, 20)
-        rows = rng.randint(0, vocab, size=k)
-        cols = rng.randint(0, vocab, size=k)
-        voice[rows, cols] += rng.uniform(2.0, 6.0, size=k)
-        voice = _row_normalize(voice)
-        n = int(np.clip(rng.lognormal(np.log(mean_samples), 0.8), 20, 8 * mean_samples))
-        # sample one long stream then slice contexts
-        stream = np.zeros(n + seq_len + 1, np.int32)
-        stream[0] = rng.randint(vocab)
-        cdf = np.cumsum(voice, axis=1)
-        u = rng.random_sample(n + seq_len)
-        for t in range(1, n + seq_len + 1):
-            stream[t] = np.searchsorted(cdf[stream[t - 1]], u[t - 1])
-        xs = np.stack([stream[i:i + seq_len] for i in range(n)])
-        ys = stream[seq_len:seq_len + n]
-        clients.append(ClientData(xs.astype(np.int32), ys.astype(np.int32)))
+
+    def body(r):
+        return _shakespeare_client(base, vocab, seq_len, mean_samples, r)
+
+    if lazy:
+        from repro.data.registry import registry_from_body
+        return registry_from_body(body, num_clients, vocab,
+                                  "synth-shakespeare", rng=rng, seed=seed,
+                                  independent=independent,
+                                  cache_clients=cache_clients)
+    clients = [body(rng) for _ in range(num_clients)]
     return FederatedDataset(clients, vocab, name="synth-shakespeare")
+
+
+def _shakespeare_client(base, vocab, seq_len, mean_samples,
+                        rng) -> ClientData:
+    """One role's line shard — the per-client generator body."""
+    # role voice: boost a random subset of transitions
+    voice = base.copy()
+    k = rng.randint(5, 20)
+    rows = rng.randint(0, vocab, size=k)
+    cols = rng.randint(0, vocab, size=k)
+    voice[rows, cols] += rng.uniform(2.0, 6.0, size=k)
+    voice = _row_normalize(voice)
+    n = int(np.clip(rng.lognormal(np.log(mean_samples), 0.8), 20, 8 * mean_samples))
+    # sample one long stream then slice contexts
+    stream = np.zeros(n + seq_len + 1, np.int32)
+    stream[0] = rng.randint(vocab)
+    cdf = np.cumsum(voice, axis=1)
+    u = rng.random_sample(n + seq_len)
+    for t in range(1, n + seq_len + 1):
+        stream[t] = np.searchsorted(cdf[stream[t - 1]], u[t - 1])
+    xs = np.stack([stream[i:i + seq_len] for i in range(n)])
+    ys = stream[seq_len:seq_len + n]
+    return ClientData(xs.astype(np.int32), ys.astype(np.int32))

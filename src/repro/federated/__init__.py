@@ -1,8 +1,12 @@
 from repro.federated.async_engine import (AsyncRoundEngine, PrefetchError,
-                                          Prefetcher, StalenessConfig)
+                                          Prefetcher, StalenessConfig,
+                                          WorkerPool, WorkerPoolError,
+                                          call_with_retry)
 from repro.federated.comm import CommTracker
 from repro.federated.faults import FaultConfig
 from repro.federated.fedavg import FedAvgTrainer
+from repro.federated.population import (CircuitBreaker, RoundPlan,
+                                        UnreliabilityConfig, plan_round)
 from repro.federated.server import FederatedTrainer, evaluate_meta, evaluate_global
 from repro.federated.experiment import (ExperimentPlan, comm_to_target,
                                         default_plan, run_comparison)

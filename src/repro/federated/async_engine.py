@@ -48,6 +48,7 @@ import jax
 import numpy as np
 
 PREFETCH_THREAD_NAME = "repro-round-prefetch"
+WORKER_THREAD_NAME = "repro-pool-worker"
 
 
 class PrefetchError(RuntimeError):
@@ -55,6 +56,35 @@ class PrefetchError(RuntimeError):
     consumer's ``get()`` with ``__cause__`` chained to the producer's
     original exception, so the failing frame's traceback survives the
     thread hop."""
+
+
+class WorkerPoolError(PrefetchError):
+    """A worker-pool task failed permanently (retries exhausted, task
+    timeout, or dead pool). Same semantics as `PrefetchError`: the
+    message names the failing work, and for task failures ``__cause__``
+    chains the worker-frame exception across the thread hop."""
+
+
+def call_with_retry(fn, *, max_retries: int, backoff: float,
+                    stop: Optional[threading.Event] = None):
+    """Run ``fn()`` with bounded exponential-backoff retries — the one
+    retry loop the prefetcher and the worker pool share (PR 6's
+    retry-with-backoff semantics: ``backoff · 2^attempt`` seconds
+    between attempts; ``fn`` must be retry-safe).
+
+    Returns ``(None, result, attempts)`` on success,
+    ``(exc, None, attempts)`` after exhaustion, or ``None`` if ``stop``
+    was set before an attempt started."""
+    for attempt in range(max(0, max_retries) + 1):
+        if stop is not None and stop.is_set():
+            return None
+        try:
+            return (None, fn(), attempt + 1)
+        except BaseException as exc:
+            if attempt >= max_retries:
+                return (exc, None, attempt + 1)
+            time.sleep(backoff * (2 ** attempt))
+    return None  # unreachable
 
 
 @dataclasses.dataclass(frozen=True)
@@ -198,16 +228,16 @@ class Prefetcher:
         return err
 
     def _produce_with_retry(self, k, r):
-        for attempt in range(self._max_retries + 1):
-            if self._stop.is_set():
-                return None
-            try:
-                return (None, self._produce(k))
-            except BaseException as exc:
-                if attempt >= self._max_retries:
-                    return (self._wrap(exc, k, r, attempt + 1), None)
-                time.sleep(self._retry_backoff * (2 ** attempt))
-        return None  # unreachable
+        out = call_with_retry(lambda: self._produce(k),
+                              max_retries=self._max_retries,
+                              backoff=self._retry_backoff,
+                              stop=self._stop)
+        if out is None:
+            return None
+        exc, item, attempts = out
+        if exc is not None:
+            return (self._wrap(exc, k, r, attempts), None)
+        return (None, item)
 
     def _run(self):
         r = self._first_round
@@ -259,6 +289,143 @@ class Prefetcher:
     @property
     def alive(self) -> bool:
         return self._thread.is_alive()
+
+
+class _PoolTask:
+    __slots__ = ("item", "result", "error", "started_at", "done")
+
+    def __init__(self, item):
+        self.item = item
+        self.result = None
+        self.error: Optional[BaseException] = None
+        self.started_at: Optional[float] = None
+        self.done = threading.Event()
+
+
+class WorkerPool:
+    """K persistent worker threads materializing client shards.
+
+    The fault-tolerant generalization of the single prefetch producer
+    (DESIGN.md §15): ``map(items)`` fans the items out to ``workers``
+    threads running ``fn(item)`` — concurrent registry
+    materialization — and blocks until every task completes, returning
+    results in submission order. Each task gets the shared
+    retry-with-backoff loop (`call_with_retry`, PR 6 semantics — ``fn``
+    must be retry-safe), and the gather side enforces a per-task
+    ``task_timeout`` measured from the moment a worker *starts* the
+    task (queue wait does not count against it).
+
+    Failure semantics mirror `PrefetchError`:
+
+      * a task that exhausts its retries raises `WorkerPoolError` at
+        ``map()`` naming the item and the caller's ``label`` (e.g. the
+        round being staged), with the worker-frame exception chained
+        via ``__cause__``;
+      * a task exceeding ``task_timeout`` raises `WorkerPoolError`
+        without waiting for the stuck worker;
+      * ``map()`` on a pool whose workers have all died raises instead
+        of deadlocking;
+      * ``close()`` stops the workers, drains queued tasks (their
+        waiters are released), and joins every thread — no leaked
+        threads, whatever the consumer did.
+
+    Example::
+
+        pool = WorkerPool(lambda i: registry[i], workers=4,
+                          max_retries=2)
+        try:
+            shards = pool.map([3, 17, 42], label="round 7")
+        finally:
+            pool.close()
+    """
+
+    def __init__(self, fn: Callable, workers: int = 2, *,
+                 max_retries: int = 0, retry_backoff: float = 0.05,
+                 task_timeout: Optional[float] = None):
+        if workers < 1:
+            raise ValueError("workers must be >= 1")
+        self._fn = fn
+        self._max_retries = max(0, max_retries)
+        self._retry_backoff = retry_backoff
+        self._task_timeout = task_timeout
+        self._q: queue.Queue = queue.Queue()
+        self._stop = threading.Event()
+        self._threads = [
+            threading.Thread(target=self._work, daemon=True,
+                             name=f"{WORKER_THREAD_NAME}-{i}")
+            for i in range(workers)]
+        for t in self._threads:
+            t.start()
+
+    def _work(self):
+        while not self._stop.is_set():
+            try:
+                task = self._q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            task.started_at = time.monotonic()
+            out = call_with_retry(lambda: self._fn(task.item),
+                                  max_retries=self._max_retries,
+                                  backoff=self._retry_backoff,
+                                  stop=self._stop)
+            if out is None:      # stopped mid-retry
+                task.error = WorkerPoolError("worker pool closed")
+            elif out[0] is not None:
+                task.error = out[0]
+            else:
+                task.result = out[1]
+            task.done.set()
+
+    def _fail(self, msg, cause=None) -> WorkerPoolError:
+        err = WorkerPoolError(msg)
+        if cause is not None:
+            err.__cause__ = cause
+        return err
+
+    def map(self, items, label: str = "") -> list:
+        """Materialize ``items`` concurrently; results in order."""
+        tasks = [_PoolTask(it) for it in items]
+        for t in tasks:
+            self._q.put(t)
+        where = f" for {label}" if label else ""
+        out = []
+        for t in tasks:
+            while not t.done.wait(timeout=0.05):
+                if self._task_timeout is not None and \
+                        t.started_at is not None and \
+                        time.monotonic() - t.started_at > \
+                        self._task_timeout:
+                    raise self._fail(
+                        f"worker task {t.item!r}{where} exceeded the "
+                        f"{self._task_timeout}s task timeout")
+                if not any(th.is_alive() for th in self._threads):
+                    raise self._fail(
+                        f"worker pool died before task {t.item!r}"
+                        f"{where} completed")
+            if t.error is not None:
+                raise self._fail(
+                    f"worker pool failed materializing {t.item!r}"
+                    f"{where} after {self._max_retries + 1} attempt(s) "
+                    f"(max_retries={self._max_retries} exhausted): "
+                    f"{type(t.error).__name__}: {t.error}", t.error)
+            out.append(t.result)
+        return out
+
+    def close(self):
+        self._stop.set()
+        while True:              # release waiters of never-run tasks
+            try:
+                task = self._q.get_nowait()
+            except queue.Empty:
+                break
+            task.error = WorkerPoolError("worker pool closed")
+            task.done.set()
+        for t in self._threads:
+            t.join(timeout=10.0)
+
+    @property
+    def alive(self) -> bool:
+        return any(t.is_alive() for t in self._threads)
 
 
 def plan_blocks(rounds: int, eval_every: int, fuse: int,

@@ -37,6 +37,15 @@ class CommTracker:
     # tree upload). Set by for_state(block_dtype=...) for the packed
     # reduced-precision block.
     grad_bytes: Optional[int] = None
+    # population plane (DESIGN.md §15): one (selected, arrived,
+    # quarantined) entry per round, appended by the trainer's staging
+    # under over-selection. Download bytes charge ALL selected
+    # candidates (φ was pushed to each of them), upload bytes and
+    # client FLOPs only the ARRIVED clients (failed/late/surplus
+    # clients never deliver a gradient). Empty = the classical
+    # fixed-cohort accounting (rounds · m) — existing artifacts are
+    # untouched.
+    participation: list = dataclasses.field(default_factory=list)
 
     @classmethod
     def for_state(cls, phi, clients_per_round: int,
@@ -51,15 +60,36 @@ class CommTracker:
     def tick(self, rounds: int = 1):
         self.rounds += rounds
 
+    def record_round(self, selected: int, arrived: int,
+                     quarantined: int = 0):
+        """Record one round's participation (population plane). Called
+        at staging time — possibly rounds ahead of ``tick()`` under
+        prefetching; `summary_at` only ever reads the first ``rounds``
+        entries, so the accounting stays a pure function of the round
+        index."""
+        self.participation.append((int(selected), int(arrived),
+                                   int(quarantined)))
+
+    def _counts_at(self, rounds: int):
+        """(selected, arrived) client-round totals as of ``rounds``."""
+        if not self.participation:
+            n = rounds * self.clients_per_round
+            return n, n
+        k = min(rounds, len(self.participation))
+        sel = sum(p[0] for p in self.participation[:k])
+        arr = sum(p[1] for p in self.participation[:k])
+        extra = max(0, rounds - k) * self.clients_per_round
+        return sel + extra, arr + extra
+
     @property
     def download_bytes(self) -> int:
-        return self.rounds * self.clients_per_round * self.phi_bytes
+        return self._counts_at(self.rounds)[0] * self.phi_bytes
 
     @property
     def upload_bytes(self) -> int:
         per_client = (self.grad_bytes if self.grad_bytes is not None
                       else self.phi_bytes)
-        return self.rounds * self.clients_per_round * per_client
+        return self._counts_at(self.rounds)[1] * per_client
 
     @property
     def total_bytes(self) -> int:
@@ -67,7 +97,7 @@ class CommTracker:
 
     @property
     def total_flops(self) -> float:
-        return self.rounds * self.clients_per_round * self.flops_per_client
+        return self._counts_at(self.rounds)[1] * self.flops_per_client
 
     def summary_at(self, rounds: int) -> dict:
         """The cumulative summary as of round ``rounds`` — a pure
@@ -76,7 +106,7 @@ class CommTracker:
         to remember its round count, not a snapshot of this tracker."""
         snap = self if rounds == self.rounds else dataclasses.replace(
             self, rounds=rounds)
-        return {
+        out = {
             "rounds": snap.rounds,
             "comm_MB": snap.total_bytes / 1e6,
             "upload_MB": snap.upload_bytes / 1e6,
@@ -87,6 +117,16 @@ class CommTracker:
             # local-head vs global-head θ asymmetry explicitly
             "phi_MB": self.phi_bytes / 1e6,
         }
+        if self.participation and rounds >= 1:
+            r = min(rounds, len(self.participation)) - 1
+            sel_r, arr_r, quar_r = self.participation[r]
+            cum_sel, cum_arr = self._counts_at(rounds)
+            # per-round participation + cumulative totals — the ints a
+            # population-plane history record carries (DESIGN.md §15)
+            out.update(selected=sel_r, arrived=arr_r,
+                       quarantined=quar_r, selected_total=cum_sel,
+                       arrived_total=cum_arr)
+        return out
 
     def summary(self) -> dict:
         return self.summary_at(self.rounds)

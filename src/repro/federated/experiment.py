@@ -50,6 +50,7 @@ import jax
 
 from repro.federated.fedavg import FedAvgTrainer
 from repro.federated.faults import FaultConfig
+from repro.federated.population import UnreliabilityConfig
 from repro.federated.server import (FederatedTrainer, evaluate_global,
                                     evaluate_meta)
 
@@ -58,9 +59,9 @@ FEDAVG_METHODS = ("fedavg", "fedavg(meta)")
 DEFAULT_METHODS = FEDAVG_METHODS + ("maml", "fomaml", "meta-sgd")
 
 
-def _femnist_data(num_clients, seed):
+def _femnist_data(num_clients, seed, **lazy_kw):
     from repro.data import make_femnist
-    return make_femnist(num_clients=num_clients, mean_samples=60, seed=seed)
+    return make_femnist(num_clients=num_clients, mean_samples=60, seed=seed, **lazy_kw)
 
 
 def _femnist_model():
@@ -68,9 +69,9 @@ def _femnist_model():
     return femnist_cnn(num_classes=62, hidden=128)
 
 
-def _sent140_data(num_clients, seed):
+def _sent140_data(num_clients, seed, **lazy_kw):
     from repro.data import make_sent140
-    return make_sent140(num_clients=num_clients, seed=seed)
+    return make_sent140(num_clients=num_clients, seed=seed, **lazy_kw)
 
 
 def _sent140_model():
@@ -78,10 +79,10 @@ def _sent140_model():
     return sent_lstm(vocab=2000, hidden=32, embed_dim=16)
 
 
-def _shakespeare_data(num_clients, seed):
+def _shakespeare_data(num_clients, seed, **lazy_kw):
     from repro.data import make_shakespeare
     return make_shakespeare(num_clients=num_clients, mean_samples=150,
-                            seed=seed)
+                            seed=seed, **lazy_kw)
 
 
 def _shakespeare_model():
@@ -98,10 +99,10 @@ REC_SERVICES, REC_CTX, REC_HEAD = 120, 24, 40
 REC_FEAT = REC_CTX + REC_SERVICES
 
 
-def _recommend_data(num_clients, seed):
+def _recommend_data(num_clients, seed, **lazy_kw):
     from repro.data import make_recommend
     return make_recommend(num_clients=num_clients, num_services=REC_SERVICES,
-                          ctx_dim=REC_CTX, seed=seed)
+                          ctx_dim=REC_CTX, seed=seed, **lazy_kw)
 
 
 def _recommend_model():
@@ -135,10 +136,10 @@ def _recommend_loss(model):
 LM_VOCAB, LM_SEQ = 64, 16
 
 
-def _lm_data(num_clients, seed):
+def _lm_data(num_clients, seed, **lazy_kw):
     from repro.data import make_lm_clients
     return make_lm_clients(num_clients=num_clients, seq_len=LM_SEQ,
-                           vocab=LM_VOCAB, seed=seed)
+                           vocab=LM_VOCAB, seed=seed, **lazy_kw)
 
 
 def _lm_model():
@@ -273,6 +274,24 @@ class ExperimentPlan:
     screen_factor: float = 3.0
     trim: int = 1
     faults: Optional["FaultConfig"] = None
+    # population plane (DESIGN.md §15): lazy client registry +
+    # deadline/over-selection staging. ``lazy_population`` builds the
+    # dataset as a bounded-memory `ClientRegistry` (sequential mode is
+    # bit-identical to eager; ``independent_population=True`` switches
+    # to O(1) per-client seeding for 10^5+ populations).
+    # ``eval_clients_cap`` bounds the val/test cohorts — at population
+    # scale "evaluate on all test clients" is neither feasible nor
+    # meaningful. The unreliability/deadline/over-selection knobs apply
+    # to the FedMeta methods only (like faults: they need the (m, N)
+    # gradient plane).
+    lazy_population: bool = False
+    independent_population: bool = False
+    cache_clients: Optional[int] = None
+    eval_clients_cap: Optional[int] = None
+    over_select: float = 0.0
+    round_deadline: Optional[float] = None
+    unreliability: Optional["UnreliabilityConfig"] = None
+    pool_workers: int = 0
     # FedMeta head width for local-head scenarios (DESIGN.md §13)
     local_head: Optional[int] = None
     # per-method lr/step overrides, paper-Table-4 style:
@@ -356,6 +375,18 @@ def make_trainer(plan: ExperimentPlan, method: str, loss_fn, eval_fn,
         raise ValueError("plan.faults / plan.aggregator need the packed "
                          "pipeline — set pipeline='packed' or "
                          "'client_plane'")
+    pop = {}
+    if (plan.unreliability is not None or plan.over_select
+            or plan.round_deadline is not None or plan.pool_workers):
+        if (plan.unreliability is not None or plan.over_select
+                or plan.round_deadline is not None) and not packed:
+            raise ValueError("plan.unreliability / over_select / "
+                             "round_deadline need the packed pipeline — "
+                             "set pipeline='packed' or 'client_plane'")
+        pop = dict(unreliability=plan.unreliability,
+                   over_select=plan.over_select,
+                   round_deadline=plan.round_deadline,
+                   pool_workers=plan.pool_workers)
     return FederatedTrainer(
         algo, adam(over.get("outer_lr", plan.outer_lr)), train_clients,
         client_axis="chunked" if plan.client_chunk else "vmap",
@@ -363,7 +394,7 @@ def make_trainer(plan: ExperimentPlan, method: str, loss_fn, eval_fn,
         client_plane=(plan.pipeline == "client_plane"),
         fuse_rounds=plan.fuse_rounds if packed else 1,
         aggregator=plan.aggregator, screen_factor=plan.screen_factor,
-        trim=plan.trim, faults=plan.faults, **common)
+        trim=plan.trim, faults=plan.faults, **pop, **common)
 
 
 @dataclasses.dataclass
@@ -389,7 +420,13 @@ def _build_views(plan: ExperimentPlan, su: dict):
     model_fn = plan.model_fn or su["model"]
     loss_builder = plan.loss_builder or su.get("loss") or (
         lambda model: classification_loss(model.apply))
-    ds = data_fn(plan.num_clients, plan.seed)
+    lazy_kw = {}
+    if plan.lazy_population:
+        # registry datasets: the builders forward these to make_*; a
+        # custom plan.data_fn must accept the same keywords
+        lazy_kw = dict(lazy=True, independent=plan.independent_population,
+                       cache_clients=plan.cache_clients)
+    ds = data_fn(plan.num_clients, plan.seed, **lazy_kw)
     train, val, test = ds.split_clients(seed=plan.seed)
     model = model_fn()
     gview = _View(train, val, test, model, *loss_builder(model))
@@ -399,11 +436,21 @@ def _build_views(plan: ExperimentPlan, su: dict):
     if meta_model_fn is None and meta_data_fn is None:
         return gview, gview
     mmodel = meta_model_fn(plan) if meta_model_fn else model
-    mtrain, mval, mtest = (
-        (meta_data_fn(c, plan) for c in (train, val, test))
-        if meta_data_fn else (train, val, test))
-    return gview, _View(list(mtrain), list(mval), list(mtest), mmodel,
+    if meta_data_fn:
+        # eager scenarios return lists; lazy ones a RegistryView — both
+        # satisfy the Sequence contract, so neither is re-materialized
+        mtrain, mval, mtest = (meta_data_fn(c, plan)
+                               for c in (train, val, test))
+    else:
+        mtrain, mval, mtest = train, val, test
+    return gview, _View(mtrain, mval, mtest, mmodel,
                         *loss_builder(mmodel))
+
+
+def _cap_clients(clients, cap: Optional[int]):
+    """Bound an eval cohort (population scale): both lists and
+    `RegistryView`s slice to a prefix view without materializing."""
+    return clients[:cap] if cap and len(clients) > cap else clients
 
 
 def _eval_records(history: list) -> list:
@@ -511,25 +558,27 @@ def run_comparison(plan: ExperimentPlan, out_dir: str = "results/experiments",
     results = {}
     for method in plan.methods:
         view = gview if method in FEDAVG_METHODS else mview
+        val = _cap_clients(view.val, plan.eval_clients_cap)
+        test = _cap_clients(view.test, plan.eval_clients_cap)
         tr = make_trainer(plan, method, view.loss_fn, view.eval_fn,
                           view.train)
         state = tr.init(jax.random.PRNGKey(plan.seed), view.model.init)
         tr.measure_flops(state)
         t0 = time.time()
         state = tr.run(state, plan.rounds, eval_every=plan.eval_every,
-                       eval_clients=view.val)
+                       eval_clients=val)
         seconds = time.time() - t0
         # reuse the trainer's jitted evaluator — a fresh one would
         # recompile the whole adapt+eval graph for the test pass
         if method in FEDAVG_METHODS:
             test_acc, per_client, test_loss = evaluate_global(
-                view.eval_fn, state["theta"], view.test,
+                view.eval_fn, state["theta"], test,
                 support_frac=plan.support_frac,
                 support_size=plan.support_size, query_size=plan.query_size,
                 seed=plan.seed, evaluator=tr.evaluator())
         else:
             test_acc, per_client, test_loss = evaluate_meta(
-                tr.algo, tr.phi_tree(state), view.test,
+                tr.algo, tr.phi_tree(state), test,
                 support_frac=plan.support_frac,
                 support_size=plan.support_size, query_size=plan.query_size,
                 seed=plan.seed, evaluator=tr.evaluator())

@@ -17,11 +17,14 @@ import numpy as np
 from repro.core.fedmeta import (_maybe_jit, init_packed_state,
                                 make_meta_train_step,
                                 make_packed_meta_train_step)
-from repro.data.federated import (TaskStream, sample_task_batch,
-                                  stack_task_batches)
-from repro.federated.async_engine import AsyncRoundEngine, StalenessConfig
+from repro.data.federated import (TaskStream, assemble_task_batch,
+                                  sample_task_batch, stack_task_batches)
+from repro.federated.async_engine import (AsyncRoundEngine, StalenessConfig,
+                                          WorkerPool)
 from repro.federated.comm import CommTracker, measure_client_flops
 from repro.federated.faults import FaultConfig
+from repro.federated.population import (CircuitBreaker, UnreliabilityConfig,
+                                        plan_round)
 from repro.kernels.meta_update import ops as mu_ops
 from repro.optim import Optimizer
 from repro.utils.flat import plane_for
@@ -154,6 +157,15 @@ class FederatedTrainer:
     checkpoint_every: int = 0   # rounds between checkpoints (0 = off)
     checkpoint_dir: Optional[str] = None
     checkpoint_keep: int = 3    # keep-last-k retention
+    # ---- population plane (DESIGN.md §15) ---------------------------
+    unreliability: Optional[UnreliabilityConfig] = None  # arrival model
+    over_select: float = 0.0    # sample m·(1+over_select) candidates
+    round_deadline: Optional[float] = None  # latency cutoff (unrel units)
+    pool_workers: int = 0       # shard-materializing workers (0 = inline)
+    pool_retries: int = 2       # per-shard retry-with-backoff budget
+    task_timeout: Optional[float] = None    # per-shard pool timeout (s)
+    breaker_threshold: int = 3  # consecutive failures before quarantine
+    breaker_cooldown: int = 10  # quarantine length in rounds
 
     def __post_init__(self):
         if self.client_plane and not self.packed:
@@ -169,6 +181,27 @@ class FederatedTrainer:
                 raise ValueError("staleness and fuse_rounds>1 are mutually "
                                  "exclusive (stragglers need per-round "
                                  "straggler picks)")
+        if self.over_select < 0:
+            raise ValueError("over_select must be >= 0")
+        if self._population_active:
+            if not self.packed or self.client_axis != "vmap":
+                raise ValueError("the population plane (unreliability / "
+                                 "over_select / round_deadline) needs "
+                                 "the full (m, N) client block — "
+                                 "packed=True and client_axis='vmap'")
+            if self.fuse_rounds > 1:
+                raise ValueError("the population plane and fuse_rounds>1 "
+                                 "are mutually exclusive (arrival plans "
+                                 "are per-round)")
+            if self.staleness is not None:
+                raise ValueError("staleness simulation and the population "
+                                 "plane are mutually exclusive — the "
+                                 "deadline model already decides who "
+                                 "arrives late")
+            if self.aggregator == "mean":
+                # partial rounds need the renormalizing aggregator:
+                # zero-weight pad rows must be exact no-ops
+                self.aggregator = "masked_mean"
         if self.aggregator not in mu_ops.AGGREGATORS:
             raise ValueError(f"unknown aggregator {self.aggregator!r}; "
                              f"expected one of {mu_ops.AGGREGATORS}")
@@ -206,9 +239,22 @@ class FederatedTrainer:
         self._fault_rng = (np.random.RandomState(self.faults.seed)
                            if self.faults is not None else None)
         self._rng_snaps: dict = {}   # round -> rng states (prefetch-safe)
+        self._breaker = (CircuitBreaker(self.breaker_threshold,
+                                        self.breaker_cooldown)
+                         if self._population_active else None)
+        self._pool: Optional[WorkerPool] = None
         self._evaluator = make_meta_evaluator(self.algo)
         self.comm: Optional[CommTracker] = None
         self.history: list = []
+
+    @property
+    def _population_active(self) -> bool:
+        """Deadline/over-selection staging replaces the plain task
+        stream. A bare pool (pool_workers>0, everything else off) is
+        NOT population mode — it only pre-warms the registry cache, so
+        staging stays bit-identical to the eager path."""
+        return (self.unreliability is not None or self.over_select > 0
+                or self.round_deadline is not None)
 
     def init(self, key, model_init):
         phi = self.algo.init_state(key, model_init)
@@ -303,14 +349,83 @@ class FederatedTrainer:
             args += (tuple(dp(f) for f in fault),)
         return args
 
+    # ---- population plane (DESIGN.md §15) ---------------------------
+    def _peek_picks(self):
+        """The upcoming task batch's client picks without consuming the
+        stream — the rng state is saved and restored, so the subsequent
+        real draw replays identically (pool cache pre-warming)."""
+        st = self._rng.get_state()
+        n = len(self.train_clients)
+        picks = self._rng.choice(n, size=self.clients_per_round,
+                                 replace=n < self.clients_per_round)
+        self._rng.set_state(st)
+        return picks
+
+    def _stage_population(self, dp, round_):
+        """Host half of one population-plane round: sample
+        ``m·(1+over_select)`` non-quarantined candidates, compute the
+        deterministic arrival plan, materialize the arrived shards
+        (through the worker pool when configured), and build the
+        zero-weight-padded batch the `masked_mean` step renormalizes.
+        Runs on the prefetch thread (in round order) when pipelined."""
+        clients = self.train_clients
+        m = self.clients_per_round
+        rng = self._rng
+        n_cand = m + int(round(self.over_select * m))
+        quar = self._breaker.blocked(round_)
+        n_total = len(clients)
+        if quar and len(quar) < n_total:
+            avail = np.setdiff1d(np.arange(n_total, dtype=np.int64),
+                                 np.fromiter(quar, np.int64, len(quar)))
+            cand = avail[rng.choice(len(avail), size=n_cand,
+                                    replace=len(avail) < n_cand)]
+        else:
+            cand = rng.choice(n_total, size=n_cand,
+                              replace=n_total < n_cand).astype(np.int64)
+        plan = plan_round(cand, round_, self.unreliability,
+                          self.round_deadline, m)
+        for c in plan.failed:
+            self._breaker.record_failure(int(c), round_)
+        for c in plan.arrived:
+            self._breaker.record_success(int(c))
+        idxs = [int(c) for c in plan.arrived]
+        label = f"round {round_}"
+        if self._pool is not None:
+            shards = self._pool.map(idxs, label=label)
+            probe = (None if idxs else
+                     self._pool.map([int(cand[0])], label=label)[0])
+        else:
+            shards = [clients[i] for i in idxs]
+            probe = None if idxs else clients[int(cand[0])]
+        tb = assemble_task_batch(shards, m, self.support_frac,
+                                 self.support_size, self.query_size, rng,
+                                 weighted=self.weighted, probe=probe)
+        # download: φ went to every candidate; upload: only arrivals
+        self.comm.record_round(len(cand), len(idxs), len(quar))
+        # weights always staged: the zero rows ARE the arrival mask
+        args = ((dp(tb.support_x), dp(tb.support_y)),
+                (dp(tb.query_x), dp(tb.query_y)), dp(tb.weight))
+        if self.faults is not None:
+            args += (None,)   # stale_sel placeholder (positional call)
+            fault = self.faults.pick(m, self._fault_rng)
+            args += (tuple(dp(f) for f in fault),)
+        return args
+
     # ---- crash-safe checkpointing (DESIGN.md §14) -------------------
     def _capture_rngs(self):
-        """Snapshot every host-side seeded stream the run consumes."""
+        """Snapshot every host-side seeded/stateful stream the run
+        consumes (the breaker and participation log ride along — they
+        mutate at staging time, so retry/resume must roll them back
+        with the rngs)."""
         snap = {"task": self._rng.get_state()}
         if self._stale_rng is not None:
             snap["stale"] = self._stale_rng.get_state()
         if self._fault_rng is not None:
             snap["fault"] = self._fault_rng.get_state()
+        if self._breaker is not None:
+            snap["breaker"] = self._breaker.state_dict()
+            snap["participation"] = (list(self.comm.participation)
+                                     if self.comm is not None else [])
         return snap
 
     def _restore_rngs(self, snap):
@@ -319,6 +434,10 @@ class FederatedTrainer:
             self._stale_rng.set_state(snap["stale"])
         if self._fault_rng is not None:
             self._fault_rng.set_state(snap["fault"])
+        if self._breaker is not None and "breaker" in snap:
+            self._breaker.load_state(snap["breaker"])
+            if self.comm is not None:
+                self.comm.participation[:] = snap.get("participation", [])
 
     def save_checkpoint(self, state, round_: int, ckpt_dir=None) -> str:
         """Write one atomic checkpoint capturing everything a resumed
@@ -335,11 +454,16 @@ class FederatedTrainer:
         payload = {
             "round": int(round_),
             "state": state,
-            "rng": {k: _rng_state_payload(s) for k, s in snap.items()},
+            "rng": {k: _rng_state_payload(snap[k])
+                    for k in ("task", "stale", "fault") if k in snap},
             "comm_rounds": int(self.comm.rounds),
             "flops_per_client": float(self.comm.flops_per_client or 0.0),
             "history": list(self.history),
         }
+        if "breaker" in snap:      # population plane host state
+            payload["breaker"] = snap["breaker"]
+            payload["participation"] = [list(p) for p in
+                                        snap.get("participation", [])]
         return save_server_state(ckpt_dir or self.checkpoint_dir,
                                  round_, payload,
                                  keep_last=self.checkpoint_keep)
@@ -360,6 +484,11 @@ class FederatedTrainer:
         self.comm.rounds = int(payload["comm_rounds"])
         if payload["flops_per_client"]:
             self.comm.flops_per_client = payload["flops_per_client"]
+        if self._breaker is not None and payload.get("breaker") is not None:
+            self._breaker.load_state(payload["breaker"])
+        self.comm.participation[:] = [
+            tuple(int(x) for x in p)
+            for p in payload.get("participation", [])]
         self.history[:] = payload["history"]
         state = payload["state"]
         return state, int(payload["round"])
@@ -380,14 +509,31 @@ class FederatedTrainer:
                             self.query_size, self._rng)
         dp = jax.device_put
         produced = {"r": start_round}   # prefetch-thread round cursor
+        if self.pool_workers > 0:
+            clients = self.train_clients
+            self._pool = WorkerPool(lambda i: clients[i],
+                                    workers=self.pool_workers,
+                                    max_retries=self.pool_retries,
+                                    task_timeout=self.task_timeout)
 
         def stage(k):
             # retry safety: a transiently failing stage() must not leak
-            # partial stream draws, or the retry would see different
-            # tasks than the synchronous run
+            # partial stream draws (or breaker/participation state), or
+            # the retry would see different tasks than the sync run
             entry = self._capture_rngs()
             try:
-                args = self._stage_block(stream, dp, k)
+                if self._population_active:
+                    args = self._stage_population(dp, produced["r"] + 1)
+                else:
+                    if self._pool is not None and k == 1:
+                        # pre-warm the registry cache for the upcoming
+                        # picks — peeked without consuming the stream,
+                        # so staging stays bit-identical to the
+                        # pool-less path
+                        self._pool.map(
+                            sorted({int(p) for p in self._peek_picks()}),
+                            label=f"round {produced['r'] + 1} warm")
+                    args = self._stage_block(stream, dp, k)
             except BaseException:
                 self._restore_rngs(entry)
                 raise
@@ -420,6 +566,11 @@ class FederatedTrainer:
             checkpoint=checkpoint,
             checkpoint_every=self.checkpoint_every,
             prefetch_retries=self.prefetch_retries)
-        return engine.run(state, rounds, eval_every=eval_every,
-                          evaluate=evaluate, log=log,
-                          start_round=start_round)
+        try:
+            return engine.run(state, rounds, eval_every=eval_every,
+                              evaluate=evaluate, log=log,
+                              start_round=start_round)
+        finally:
+            if self._pool is not None:
+                self._pool.close()   # no leaked worker threads, ever
+                self._pool = None

@@ -1,0 +1,311 @@
+"""Lazy client registry invariants (DESIGN.md §15, tentpole part 1).
+
+The registry's load-bearing contract: a lazy `ClientRegistry` in
+sequential mode is **bit-identical** to the eager `FederatedDataset`
+for every scenario generator — same client arrays, same splits, same
+task batches, same 10-round trainer histories across every pipeline
+mode — while an independent-mode registry holds 10^5 clients behind a
+bounded LRU cache whose peak residency never exceeds the cap. Plus the
+partial-round batch assembler's hand-checked renormalization, shard
+round-trips, and once-only synthesis under K concurrent readers.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import classification_loss, make_algorithm
+from repro.data.federated import (ClientData, FederatedDataset,
+                                  assemble_task_batch, sample_task_batch)
+from repro.data.lm_tasks import make_lm_clients
+from repro.data.registry import (ClientRegistry, IndependentClientSource,
+                                 RegistryView, load_shard_registry,
+                                 registry_from_body, save_shards)
+from repro.data.synth_femnist import make_femnist
+from repro.data.synth_recommend import localize_clients, make_recommend
+from repro.data.synth_sent140 import make_sent140
+from repro.data.synth_shakespeare import make_shakespeare
+from repro.federated.server import FederatedTrainer
+from repro.federated.async_engine import StalenessConfig
+from repro.federated.faults import FaultConfig
+from repro.optim import adam
+
+MAKERS = {
+    "femnist": lambda **kw: make_femnist(
+        num_clients=10, num_classes=5, image_size=8, mean_samples=12,
+        seed=3, **kw),
+    "sent140": lambda **kw: make_sent140(
+        num_clients=10, seq_len=6, vocab=50, mean_samples=12, seed=3,
+        **kw),
+    "shakespeare": lambda **kw: make_shakespeare(
+        num_clients=8, seq_len=8, mean_samples=20, seed=3, **kw),
+    "recommend": lambda **kw: make_recommend(
+        num_clients=10, num_services=60, ctx_dim=4, mean_records=20,
+        seed=3, **kw),
+    "lm": lambda **kw: make_lm_clients(
+        num_clients=10, mean_seqs=8, seq_len=6, vocab=20, seed=3, **kw),
+}
+
+
+def _clients_of(ds):
+    return ds.clients if isinstance(ds, FederatedDataset) else ds
+
+
+# ---- bit-identity: lazy sequential == eager, all five scenarios ---------
+
+@pytest.mark.parametrize("scenario", list(MAKERS))
+def test_lazy_sequential_bit_identical(scenario):
+    """Every client array, the seeded split, and a seeded task batch of
+    the lazy registry must equal the eager dataset's exactly — the
+    registry replays the SAME sequential rng stream."""
+    eager = MAKERS[scenario]()
+    lazy = MAKERS[scenario](lazy=True)
+    ec, lc = _clients_of(eager), lazy
+    assert len(lc) == len(ec) and lazy.num_classes == eager.num_classes
+    for i in range(len(ec)):
+        np.testing.assert_array_equal(lc[i].x, ec[i].x)
+        np.testing.assert_array_equal(lc[i].y, ec[i].y)
+
+    # seeded splits land on the same client indices / data
+    et, ev, es = eager.split_clients(seed=7)
+    lt, lv, ls = lazy.split_clients(seed=7)
+    for e_split, l_split in ((et, lt), (ev, lv), (es, ls)):
+        assert len(l_split) == len(e_split)
+        for e, l in zip(e_split, (l_split[j] for j in range(len(l_split)))):
+            np.testing.assert_array_equal(l.x, e.x)
+            np.testing.assert_array_equal(l.y, e.y)
+
+    # a seeded task batch drawn THROUGH the registry is byte-identical
+    tb_e = sample_task_batch(ec, 4, 0.5, 4, 4, np.random.RandomState(11))
+    tb_l = sample_task_batch(lazy, 4, 0.5, 4, 4, np.random.RandomState(11))
+    for f in tb_e._fields:
+        np.testing.assert_array_equal(getattr(tb_l, f), getattr(tb_e, f))
+
+
+def test_lazy_sequential_bit_identical_with_tiny_cache():
+    """A cache far smaller than the population forces every access to
+    re-synthesize from the rng snapshot — the data must not change."""
+    eager = MAKERS["femnist"]()
+    lazy = MAKERS["femnist"](lazy=True, cache_clients=2)
+    for i in (7, 0, 9, 3, 7, 0):     # revisits after guaranteed eviction
+        np.testing.assert_array_equal(lazy[i].x, eager.clients[i].x)
+        np.testing.assert_array_equal(lazy[i].y, eager.clients[i].y)
+    st = lazy.cache_stats()
+    assert st["peak_resident"] <= 2 and st["evictions"] > 0
+
+
+def test_localize_view_parity_recommend():
+    """The recommend local-head view composes lazily: a registry view's
+    localized labels equal the eager localize output per client."""
+    eager = MAKERS["recommend"]()
+    lazy = MAKERS["recommend"](lazy=True)
+    e_loc = localize_clients(eager.clients, head_size=40)
+    l_loc = localize_clients(lazy, head_size=40)
+    assert isinstance(l_loc, RegistryView)
+    assert l_loc.num_classes == 40
+    for i in range(len(e_loc)):
+        np.testing.assert_array_equal(l_loc[i].x, e_loc[i].x)
+        np.testing.assert_array_equal(l_loc[i].y, e_loc[i].y)
+
+
+# ---- trainer histories: lazy == eager across every pipeline mode --------
+
+class _FemnistModel:
+    @staticmethod
+    def init(key):
+        k, _ = jax.random.split(key)
+        return {"w": jax.random.normal(k, (64, 5)) * 0.1,
+                "b": jnp.zeros((5,))}
+
+    @staticmethod
+    def apply(params, x):
+        return x.reshape(x.shape[0], -1) @ params["w"] + params["b"]
+
+
+PIPELINES = {
+    "sync": {},
+    "prefetch": dict(prefetch_depth=2, flush_every=3),
+    "fused-k": dict(fuse_rounds=3, prefetch_depth=1, flush_every=0),
+    "staleness": dict(staleness=StalenessConfig(delay=1, fraction=0.34,
+                                                discount=0.5)),
+    "faults": dict(faults=FaultConfig(dropout=0.25, byzantine=0.25,
+                                      seed=5), aggregator="trimmed",
+                   trim=1),
+}
+
+
+@pytest.mark.parametrize("pipeline", list(PIPELINES), ids=list(PIPELINES))
+def test_lazy_history_bit_identical(pipeline):
+    """10 femnist rounds, eager clients vs a lazy registry with an
+    eviction-forcing cache, on every pipeline mode: histories must be
+    equal record for record (the registry is invisible to the stream)."""
+    def run(train):
+        algo = make_algorithm("fomaml",
+                              *classification_loss(_FemnistModel.apply),
+                              inner_lr=0.05)
+        tr = FederatedTrainer(algo, adam(1e-3), train, 4,
+                              support_frac=0.5, support_size=4,
+                              query_size=4, seed=0, packed=True,
+                              **PIPELINES[pipeline])
+        state = tr.init(jax.random.PRNGKey(0), _FemnistModel.init)
+        tr.run(state, 10, eval_every=0)
+        return tr.history
+
+    eager = run(MAKERS["femnist"]().clients)
+    lazy = run(MAKERS["femnist"](lazy=True, cache_clients=3))
+    assert lazy == eager
+
+
+# ---- bounded memory at population scale ---------------------------------
+
+def test_lru_bound_under_1e5_sweep():
+    """An independent-mode registry over 10^5 clients: O(1) per-client
+    seeding (no construction pass), and a full index sweep keeps peak
+    residency at the cache cap — the bounded-memory claim."""
+    def body(rng):
+        y = rng.randint(0, 2, size=4).astype(np.int64)
+        return ClientData(rng.normal(0, 1, (4, 2)).astype(np.float32), y)
+
+    n = 100_000
+    reg = registry_from_body(body, n, 2, "pop", independent=True, seed=9,
+                             cache_clients=64)
+    assert len(reg) == n
+    step = 997                         # sparse sweep across the range
+    for i in range(0, n, step):
+        assert reg[i].n == 4
+    # then hammer a dense window larger than the cache
+    for i in range(5_000, 5_000 + 512):
+        reg[i]
+    st = reg.cache_stats()
+    assert st["peak_resident"] <= 64
+    assert st["resident"] <= 64
+    assert st["evictions"] > 0
+    # determinism: client i is a pure function of (seed, i)
+    a, b = reg[31_337], reg[31_337 - 1]
+    again = IndependentClientSource(body, n, 9).get(31_337)
+    np.testing.assert_array_equal(a.x, again.x)
+    assert not np.array_equal(a.x, b.x)
+
+
+def test_registry_validation_and_indexing():
+    def body(rng):
+        return ClientData(rng.normal(0, 1, (3, 2)).astype(np.float32),
+                          np.array([0, 1, 0], np.int64))
+
+    with pytest.raises(ValueError, match="cache_clients"):
+        registry_from_body(body, 4, 2, "x", independent=True,
+                           cache_clients=0)
+    with pytest.raises(ValueError, match="rng"):
+        registry_from_body(body, 4, 2, "x")      # sequential needs rng
+    reg = registry_from_body(body, 4, 2, "x", independent=True)
+    np.testing.assert_array_equal(reg[-1].x, reg[3].x)
+    with pytest.raises(IndexError):
+        reg[4]
+    sl = reg[1:3]
+    assert isinstance(sl, RegistryView) and len(sl) == 2
+    np.testing.assert_array_equal(sl[0].x, reg[1].x)
+    # view transform must preserve client sizes
+    bad = reg.view(lambda c: ClientData(c.x[:1], c.y[:1]))
+    with pytest.raises(ValueError, match="preserve client sizes"):
+        bad[0]
+    # chained views compose (and the chain re-checks n-preservation)
+    v = reg.view(lambda c: ClientData(c.x, 1 - c.y))
+    vv = v.view(lambda c: ClientData(c.x, 1 - c.y))
+    np.testing.assert_array_equal(vv[2].y, reg[2].y)
+    # stats over a sampled prefix
+    st = reg.stats(max_clients=2)
+    assert st["clients"] == 4 and st["sampled"] == 2
+
+
+def test_shard_roundtrip(tmp_path):
+    eager = MAKERS["lm"]()
+    save_shards(eager.clients, str(tmp_path), eager.num_classes,
+                name="lm-shards")
+    reg = load_shard_registry(str(tmp_path), cache_clients=3)
+    assert len(reg) == len(eager.clients)
+    assert reg.num_classes == eager.num_classes and reg.name == "lm-shards"
+    for i in range(len(reg)):
+        np.testing.assert_array_equal(reg[i].x, eager.clients[i].x)
+        np.testing.assert_array_equal(reg[i].y, eager.clients[i].y)
+    assert reg.cache_stats()["peak_resident"] <= 3
+
+
+def test_concurrent_access_synthesizes_once():
+    """K threads racing for the same client must synthesize it exactly
+    once (the in-flight event) and all read identical arrays."""
+    calls = []
+    lock = threading.Lock()
+
+    def body(rng):
+        with lock:
+            calls.append(1)
+        return ClientData(rng.normal(0, 1, (3, 2)).astype(np.float32),
+                          np.array([0, 1, 0], np.int64))
+
+    reg = registry_from_body(body, 8, 2, "x", independent=True,
+                             cache_clients=8)
+    results, errors = [], []
+
+    def hit():
+        try:
+            for i in (5, 5, 5, 2):
+                results.append((i, reg[i].x))
+        except BaseException as e:   # pragma: no cover - diagnostic
+            errors.append(e)
+
+    threads = [threading.Thread(target=hit) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert len(calls) == 2           # clients 5 and 2, once each
+    for i, x in results:
+        np.testing.assert_array_equal(x, reg[i].x)
+
+
+def test_materialize_matches_eager():
+    eager = MAKERS["sent140"]()
+    snap = MAKERS["sent140"](lazy=True).materialize()
+    assert isinstance(snap, FederatedDataset)
+    for a, b in zip(snap.clients, eager.clients):
+        np.testing.assert_array_equal(a.x, b.x)
+        np.testing.assert_array_equal(a.y, b.y)
+
+
+# ---- the partial-round batch assembler ----------------------------------
+
+def test_assemble_task_batch_hand_check():
+    """3 arrived of m=4: rows 0..2 are the arrivals in order with
+    weights n_i/Σn, row 3 is a zero-weight copy of row 0."""
+    rng0 = np.random.RandomState(2)
+    shards = [ClientData(rng0.normal(0, 1, (n, 2)).astype(np.float32),
+                         rng0.randint(0, 2, n).astype(np.int64))
+              for n in (10, 20, 30)]
+    tb = assemble_task_batch(shards, 4, 0.5, 4, 4,
+                             np.random.RandomState(0))
+    np.testing.assert_allclose(tb.weight, [10 / 60, 20 / 60, 30 / 60, 0.0],
+                               rtol=1e-6)
+    np.testing.assert_array_equal(tb.support_x[3], tb.support_x[0])
+    np.testing.assert_array_equal(tb.query_y[3], tb.query_y[0])
+    assert tb.query_count[3] == 0
+    assert tb.support_x.shape == (4, 4, 2)
+
+    # unweighted: uniform over arrivals
+    tb_u = assemble_task_batch(shards, 4, 0.5, 4, 4,
+                               np.random.RandomState(0), weighted=False)
+    np.testing.assert_allclose(tb_u.weight, [1 / 3, 1 / 3, 1 / 3, 0.0],
+                               rtol=1e-6)
+
+    # all-failed round: probe supplies shapes, weights are all zero
+    tb_0 = assemble_task_batch([], 4, 0.5, 4, 4, np.random.RandomState(0),
+                               probe=shards[0])
+    np.testing.assert_array_equal(tb_0.weight, np.zeros(4, np.float32))
+    assert tb_0.support_x.shape == (4, 4, 2)
+
+    with pytest.raises(ValueError, match="at most"):
+        assemble_task_batch(shards, 2, 0.5, 4, 4, np.random.RandomState(0))
+    with pytest.raises(ValueError, match="probe"):
+        assemble_task_batch([], 4, 0.5, 4, 4, np.random.RandomState(0))

@@ -1,0 +1,509 @@
+"""Worker pool + population plane invariants (DESIGN.md §15, tentpole
+part 2).
+
+Covers: the shared retry loop, pool lifecycle with K>1 workers (no
+leaked threads, whatever fails), `WorkerPoolError` semantics mirroring
+`PrefetchError` (label + chained cause), per-task timeouts and
+dead-pool detection; the deterministic unreliability model and the
+deadline/over-selection arithmetic against hand-computed arrivals;
+circuit-breaker state transitions; and the trainer end to end — comm
+accounting (download charges selected, upload charges arrived), the
+all-failed guard skip, bare-pool bit-identity, prefetched-population
+determinism, and checkpoint/resume carrying breaker + participation.
+"""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.io import latest_step
+from repro.core import classification_loss, make_algorithm
+from repro.data.federated import assemble_task_batch
+from repro.federated.async_engine import (PREFETCH_THREAD_NAME,
+                                          WORKER_THREAD_NAME, WorkerPool,
+                                          WorkerPoolError, call_with_retry)
+from repro.federated.comm import CommTracker
+from repro.federated.population import (CircuitBreaker, UnreliabilityConfig,
+                                        plan_round)
+from repro.federated.server import FederatedTrainer
+from repro.optim import adam
+from tests.test_async_engine import EVAL, TRAIN, _TinyModel
+
+LOSS_FN, EVAL_FN = classification_loss(_TinyModel.apply)
+
+
+def _no_pool_threads():
+    return all(not t.name.startswith((WORKER_THREAD_NAME,
+                                      PREFETCH_THREAD_NAME))
+               for t in threading.enumerate())
+
+
+def _pop_trainer(**kw):
+    algo = make_algorithm("fomaml", LOSS_FN, EVAL_FN, inner_lr=0.05)
+    return FederatedTrainer(algo, adam(1e-3), TRAIN, 4, support_frac=0.5,
+                            support_size=8, query_size=8, seed=0,
+                            packed=True, **kw)
+
+
+# ---- the shared retry loop ----------------------------------------------
+
+def test_call_with_retry():
+    err, out, n = call_with_retry(lambda: 42, max_retries=3, backoff=0)
+    assert (err, out, n) == (None, 42, 1)
+
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise OSError("transient")
+        return "ok"
+
+    err, out, n = call_with_retry(flaky, max_retries=5, backoff=0)
+    assert (err, out, n) == (None, "ok", 3)
+
+    boom = RuntimeError("permanent")
+
+    def dead():
+        raise boom
+
+    err, out, n = call_with_retry(dead, max_retries=2, backoff=0)
+    assert err is boom and out is None and n == 3
+
+    stop = threading.Event()
+    stop.set()
+    assert call_with_retry(lambda: 1, max_retries=0, backoff=0,
+                           stop=stop) is None
+
+
+def test_call_with_retry_backoff_schedule(monkeypatch):
+    """backoff · 2^attempt between attempts — the PR-6 schedule."""
+    import repro.federated.async_engine as ae
+    sleeps = []
+    monkeypatch.setattr(ae.time, "sleep", sleeps.append)
+
+    def dead():
+        raise OSError("x")
+
+    call_with_retry(dead, max_retries=3, backoff=0.1)
+    assert sleeps == pytest.approx([0.1, 0.2, 0.4])
+
+
+# ---- worker pool lifecycle ----------------------------------------------
+
+def test_pool_map_in_order_k4():
+    pool = WorkerPool(lambda i: i * i, workers=4)
+    try:
+        assert pool.map(range(20)) == [i * i for i in range(20)]
+        assert pool.map([]) == []
+    finally:
+        pool.close()
+    assert not pool.alive
+    assert _no_pool_threads()
+
+
+def test_pool_transient_failure_retries():
+    calls, lock = {}, threading.Lock()
+
+    def flaky(i):
+        with lock:
+            calls[i] = calls.get(i, 0) + 1
+            if i == 2 and calls[i] < 3:
+                raise OSError("transient")
+        return i
+
+    pool = WorkerPool(flaky, workers=2, max_retries=3, retry_backoff=0.0)
+    try:
+        assert pool.map([1, 2, 3]) == [1, 2, 3]
+    finally:
+        pool.close()
+    assert calls[2] == 3
+    assert _no_pool_threads()
+
+
+def test_pool_permanent_failure_names_label_and_chains_cause():
+    def dead(i):
+        if i == 7:
+            raise ValueError("shard corrupt")
+        return i
+
+    pool = WorkerPool(dead, workers=3, max_retries=1, retry_backoff=0.0)
+    try:
+        with pytest.raises(WorkerPoolError, match=r"7.*round 5") as ei:
+            pool.map([1, 7, 3], label="round 5")
+        assert isinstance(ei.value.__cause__, ValueError)
+        assert "shard corrupt" in str(ei.value.__cause__)
+        assert "2 attempt(s)" in str(ei.value)
+    finally:
+        pool.close()
+    assert _no_pool_threads()
+
+
+def test_pool_task_timeout():
+    release = threading.Event()
+
+    def stuck(i):
+        if i == 1:
+            release.wait(5.0)
+        return i
+
+    pool = WorkerPool(stuck, workers=2, task_timeout=0.2)
+    try:
+        with pytest.raises(WorkerPoolError, match="task timeout"):
+            pool.map([0, 1], label="round 9")
+    finally:
+        release.set()
+        pool.close()
+    assert _no_pool_threads()
+
+
+def test_pool_dead_pool_raises_instead_of_deadlocking():
+    pool = WorkerPool(lambda i: i, workers=2)
+    pool.close()                      # workers are gone
+    with pytest.raises(WorkerPoolError):
+        pool.map([1])
+    assert _no_pool_threads()
+
+
+# ---- deterministic unreliability ----------------------------------------
+
+def test_unreliability_deterministic_and_validated():
+    u = UnreliabilityConfig(fail_rate=0.5, chronic_frac=0.2, seed=1)
+    assert u.draw(3, 7) == u.draw(3, 7)
+    assert u.client_profile(3) == u.client_profile(3)
+    # chronic clients fail every round
+    chronics = [c for c in range(200) if u.client_profile(c)[0]]
+    assert 10 < len(chronics) < 80          # ~20% of 200
+    for c in chronics[:5]:
+        assert all(u.draw(c, r)[0] for r in range(5))
+    # all-fail / never-fail extremes
+    dead = UnreliabilityConfig(fail_rate=1.0, seed=2)
+    assert all(dead.draw(c, 0)[0] for c in range(20))
+    alive = UnreliabilityConfig(fail_rate=0.0, seed=2)
+    assert not any(alive.draw(c, 0)[0] for c in range(20))
+    with pytest.raises(ValueError, match="fail_rate"):
+        UnreliabilityConfig(fail_rate=1.5)
+    with pytest.raises(ValueError, match="chronic_frac"):
+        UnreliabilityConfig(chronic_frac=-0.1)
+    # disjoint per-(client, round) streams actually vary latency
+    lats = {round(u.draw(0, r)[1], 6) for r in range(5)}
+    assert len(lats) == 5
+
+
+def test_plan_round_hand_check():
+    """m=4, over_select=0.25 → 5 candidates; stub latencies/failures →
+    hand-computed arrived/late/surplus sets and renormalized weights."""
+    class Stub:
+        # candidate: (failed, latency)
+        table = {10: (False, 3.0), 11: (True, 1.0), 12: (False, 1.0),
+                 13: (False, 9.0), 14: (False, 2.0)}
+
+        def draw(self, client, round_):
+            return self.table[client]
+
+    plan = plan_round([10, 11, 12, 13, 14], 1, Stub(), deadline=5.0, m=4)
+    np.testing.assert_array_equal(plan.candidates, [10, 11, 12, 13, 14])
+    # on time: 12 (1.0) < 14 (2.0) < 10 (3.0); 13 misses the 5.0
+    # deadline; 11 failed outright — 3 arrivals, shortfall of 1
+    np.testing.assert_array_equal(plan.arrived, [12, 14, 10])
+    np.testing.assert_array_equal(plan.failed, [11])
+    np.testing.assert_array_equal(plan.late, [13])
+    np.testing.assert_array_equal(plan.surplus, [])
+    assert np.isnan(plan.latencies[1]) and plan.latencies[2] == 1.0
+
+    # surplus: everyone on time, first m in latency order win the race
+    class Fast:
+        def draw(self, client, round_):
+            return (False, float(client))
+
+    p2 = plan_round([5, 4, 3, 2, 1], 1, Fast(), deadline=None, m=4)
+    np.testing.assert_array_equal(p2.arrived, [1, 2, 3, 4])
+    np.testing.assert_array_equal(p2.surplus, [5])
+
+    # latency tie: candidate position breaks it
+    class Tie:
+        def draw(self, client, round_):
+            return (False, 1.0)
+
+    p3 = plan_round([9, 8, 7], 1, Tie(), deadline=2.0, m=2)
+    np.testing.assert_array_equal(p3.arrived, [9, 8])
+    np.testing.assert_array_equal(p3.surplus, [7])
+
+    # no unreliability model: candidate order, zero latency
+    p4 = plan_round([6, 5, 4], 1, None, deadline=1.0, m=2)
+    np.testing.assert_array_equal(p4.arrived, [6, 5])
+    np.testing.assert_array_equal(p4.surplus, [4])
+    np.testing.assert_array_equal(p4.failed, [])
+
+    # the shortfall renormalizes over arrivals via the assembler
+    from repro.data.federated import ClientData
+    rng = np.random.RandomState(0)
+    shards = [ClientData(rng.normal(0, 1, (n, 4)).astype(np.float32),
+                         rng.randint(0, 2, n).astype(np.int64))
+              for n in (12, 18, 30)]
+    tb = assemble_task_batch(shards, 4, 0.5, 8, 8,
+                             np.random.RandomState(1))
+    np.testing.assert_allclose(tb.weight, [0.2, 0.3, 0.5, 0.0], rtol=1e-6)
+
+
+# ---- circuit breaker ----------------------------------------------------
+
+def test_circuit_breaker_transitions():
+    b = CircuitBreaker(threshold=3, cooldown=4)
+    assert b.state(5, 1) == "closed"
+    b.record_failure(5, 1)
+    b.record_failure(5, 2)
+    assert b.state(5, 3) == "closed" and b.blocked(3) == set()
+    b.record_failure(5, 3)                      # third consecutive: trip
+    assert b.state(5, 4) == "open"
+    assert b.blocked(4) == {5} and b.blocked(7) == {5}
+    assert b.state(5, 8) == "half_open" and b.blocked(8) == set()
+    # half-open trial fails once -> re-trips immediately
+    b.record_failure(5, 8)
+    assert b.state(5, 9) == "open" and b.blocked(9) == {5}
+    # cooldown again, then the trial succeeds -> fully closed
+    assert b.state(5, 13) == "half_open"
+    b.record_success(5)
+    assert b.state(5, 13) == "closed"
+    b.record_failure(5, 14)
+    b.record_failure(5, 15)
+    assert b.state(5, 16) == "closed"           # count was reset
+
+    # a success between failures resets the consecutive count
+    b2 = CircuitBreaker(threshold=2, cooldown=3)
+    b2.record_failure(1, 1)
+    b2.record_success(1)
+    b2.record_failure(1, 2)
+    assert b2.state(1, 3) == "closed"
+
+    with pytest.raises(ValueError):
+        CircuitBreaker(threshold=0)
+
+
+def test_circuit_breaker_state_roundtrip():
+    b = CircuitBreaker(threshold=2, cooldown=5)
+    b.record_failure(3, 1)
+    b.record_failure(3, 2)                      # open
+    b.record_failure(8, 2)
+    d = b.state_dict()
+    b2 = CircuitBreaker(threshold=2, cooldown=5)
+    b2.load_state(d)
+    for r in range(3, 10):
+        assert b2.state(3, r) == b.state(3, r)
+        assert b2.blocked(r) == b.blocked(r)
+    assert b2.state_dict() == d
+
+
+# ---- comm accounting ----------------------------------------------------
+
+def test_comm_tracker_participation_accounting():
+    c = CommTracker(phi_bytes=100, clients_per_round=4,
+                    flops_per_client=10.0)
+    c.record_round(5, 3, 0)       # round 1: 5 selected, 3 arrived
+    c.record_round(5, 4, 1)       # round 2 (staged ahead of tick)
+    c.tick()
+    assert c.download_bytes == 5 * 100        # ALL selected pay download
+    assert c.upload_bytes == 3 * 100          # only ARRIVED upload
+    assert c.total_flops == 3 * 10.0
+    s1 = c.summary_at(1)
+    assert (s1["selected"], s1["arrived"], s1["quarantined"]) == (5, 3, 0)
+    assert s1["selected_total"] == 5 and s1["arrived_total"] == 3
+    assert all(isinstance(s1[k], int) for k in
+               ("selected", "arrived", "quarantined", "selected_total",
+                "arrived_total"))
+    c.tick()
+    s2 = c.summary_at(2)
+    assert (s2["selected"], s2["arrived"], s2["quarantined"]) == (5, 4, 1)
+    assert s2["selected_total"] == 10 and s2["arrived_total"] == 7
+    assert s2["download_MB"] == pytest.approx(10 * 100 / 1e6)
+    assert s2["upload_MB"] == pytest.approx(7 * 100 / 1e6)
+    # empty participation = the classical fixed-cohort accounting
+    c0 = CommTracker(phi_bytes=100, clients_per_round=4)
+    c0.tick(3)
+    assert c0.download_bytes == c0.upload_bytes == 3 * 4 * 100
+    assert "selected" not in c0.summary()
+
+
+# ---- trainer end to end -------------------------------------------------
+
+def test_population_trainer_end_to_end():
+    """Over-selection + deadline + unreliability through the pool: the
+    aggregator auto-upgrades, every history record carries int
+    participation fields, download strictly exceeds upload, and no
+    threads leak."""
+    tr = _pop_trainer(
+        unreliability=UnreliabilityConfig(fail_rate=0.3, latency_mean=1.0,
+                                          seed=7),
+        over_select=0.5, round_deadline=2.0, pool_workers=2)
+    assert tr.aggregator == "masked_mean" and tr.guard
+    state = tr.init(jax.random.PRNGKey(0), _TinyModel.init)
+    tr.run(state, 6, eval_every=3, eval_clients=EVAL)
+    assert _no_pool_threads()
+    assert len(tr.history) == 6
+    for rec in tr.history:
+        assert rec["selected"] == 6            # m·(1+0.5)
+        assert isinstance(rec["arrived"], int) and 0 <= rec["arrived"] <= 4
+        assert isinstance(rec["quarantined"], int)
+    assert tr.comm.download_bytes > tr.comm.upload_bytes
+    assert tr.history[-1]["selected_total"] == 36
+    assert tr.history[-1]["arrived_total"] == \
+        sum(r["arrived"] for r in tr.history)
+
+
+def test_population_prefetched_history_deterministic():
+    """Arrival outcomes are pure functions of (seed, client, round) —
+    a prefetched population run equals the synchronous one."""
+    def run(**kw):
+        tr = _pop_trainer(
+            unreliability=UnreliabilityConfig(fail_rate=0.3, seed=7),
+            over_select=0.5, round_deadline=2.0, **kw)
+        state = tr.init(jax.random.PRNGKey(0), _TinyModel.init)
+        tr.run(state, 6, eval_every=3, eval_clients=EVAL)
+        return tr.history
+
+    sync = run()
+    piped = run(prefetch_depth=2, flush_every=2)
+    pooled = run(pool_workers=3)
+    assert piped == sync and pooled == sync
+    assert _no_pool_threads()
+
+
+def test_bare_pool_is_bit_identical():
+    """pool_workers>0 with every population knob off only pre-warms the
+    registry cache — the history must equal the no-pool run exactly."""
+    def run(**kw):
+        tr = _pop_trainer(**kw)
+        state = tr.init(jax.random.PRNGKey(0), _TinyModel.init)
+        tr.run(state, 5, eval_every=0)
+        return tr.history
+
+    assert run(pool_workers=3) == run()
+    assert _no_pool_threads()
+
+
+def test_all_failed_round_guard_skips():
+    """fail_rate=1.0: every candidate fails, the probe-shaped batch has
+    all-zero weights, and the guard skips every round (φ unchanged)."""
+    tr = _pop_trainer(
+        unreliability=UnreliabilityConfig(fail_rate=1.0, seed=3),
+        over_select=0.25)
+    state = tr.init(jax.random.PRNGKey(0), _TinyModel.init)
+    phi0 = np.asarray(state["phi"]).copy()
+    out = tr.run(state, 3, eval_every=0)
+    assert all(rec["skipped"] == 1.0 for rec in tr.history)
+    assert all(rec["arrived"] == 0 for rec in tr.history)
+    np.testing.assert_array_equal(np.asarray(out["phi"]), phi0)
+    # ...and chronic failures trip the breaker into quarantine
+    assert len(tr._breaker.blocked(4)) > 0
+
+
+def test_population_validation():
+    algo = make_algorithm("fomaml", LOSS_FN, EVAL_FN, inner_lr=0.05)
+    with pytest.raises(ValueError, match="population"):
+        FederatedTrainer(algo, adam(1e-3), TRAIN, 4, support_frac=0.5,
+                         support_size=8, query_size=8, over_select=0.5)
+    with pytest.raises(ValueError, match="over_select"):
+        _pop_trainer(over_select=-0.1)
+    with pytest.raises(ValueError, match="fuse_rounds"):
+        _pop_trainer(over_select=0.5, fuse_rounds=2)
+    with pytest.raises(ValueError, match="staleness"):
+        from repro.federated.async_engine import StalenessConfig
+        _pop_trainer(over_select=0.5, staleness=StalenessConfig())
+
+
+def _same_history(a, b):
+    """Record-for-record equality, NaN-aware (guard-skipped rounds
+    carry NaN metrics, and nan != nan would fail dict equality)."""
+    if len(a) != len(b):
+        return False
+    for ra, rb in zip(a, b):
+        if set(ra) != set(rb):
+            return False
+        for k in ra:
+            va, vb = ra[k], rb[k]
+            if isinstance(va, float) and isinstance(vb, float) and \
+                    np.isnan(va) and np.isnan(vb):
+                continue
+            if va != vb:
+                return False
+    return True
+
+
+def test_population_checkpoint_resume_bit_identical(tmp_path):
+    """Kill-and-resume under the population plane: breaker state and
+    the participation log ride the checkpoint, so the stitched history
+    (including comm fields) equals the uninterrupted run's."""
+    kw = dict(unreliability=UnreliabilityConfig(fail_rate=0.4, seed=11),
+              over_select=0.5, round_deadline=2.0,
+              breaker_threshold=2, breaker_cooldown=3)
+
+    def full():
+        tr = _pop_trainer(**kw)
+        state = tr.init(jax.random.PRNGKey(0), _TinyModel.init)
+        tr.run(state, 9, eval_every=3, eval_clients=EVAL)
+        return tr.history
+
+    tr1 = _pop_trainer(checkpoint_dir=str(tmp_path), checkpoint_every=3,
+                       **kw)
+    state = tr1.init(jax.random.PRNGKey(0), _TinyModel.init)
+    tr1.run(state, 6, eval_every=3, eval_clients=EVAL)
+    assert latest_step(str(tmp_path)) == 6
+
+    tr2 = _pop_trainer(checkpoint_dir=str(tmp_path), checkpoint_every=3,
+                       **kw)
+    tr2.init(jax.random.PRNGKey(0), _TinyModel.init)
+    state2, start = tr2.resume()
+    assert start == 6
+    assert len(tr2.comm.participation) == 6    # restored with the rngs
+    tr2.run(state2, 9, eval_every=3, eval_clients=EVAL, start_round=start)
+    assert _same_history(tr2.history, full())
+    assert _no_pool_threads()
+
+
+def test_step_exception_shuts_down_pool_k3():
+    """A step raising mid-run with K=3 pool workers + prefetch must
+    leak neither pool nor prefetch threads (the PR-6 leak test,
+    extended to K>1)."""
+    tr = _pop_trainer(
+        unreliability=UnreliabilityConfig(fail_rate=0.2, seed=5),
+        over_select=0.5, pool_workers=3, prefetch_depth=2, flush_every=0)
+    state = tr.init(jax.random.PRNGKey(0), _TinyModel.init)
+    real_step, calls = tr._step, []
+
+    def boom(st, *a):
+        calls.append(1)
+        if len(calls) == 3:
+            raise RuntimeError("client exploded")
+        return real_step(st, *a)
+
+    tr._step = boom
+    with pytest.raises(RuntimeError, match="client exploded"):
+        tr.run(state, 8)
+    assert _no_pool_threads()
+    assert tr._pool is None
+    assert [r["round"] for r in tr.history] == [1, 2]
+
+
+def test_pool_shard_failure_surfaces_at_run(monkeypatch):
+    """A registry whose shard synthesis fails permanently surfaces as
+    WorkerPoolError naming the round — and still shuts the pool down."""
+    class Exploding:
+        def __len__(self):
+            return len(TRAIN)
+
+        def __getitem__(self, i):
+            raise OSError("disk gone")
+
+    algo = make_algorithm("fomaml", LOSS_FN, EVAL_FN, inner_lr=0.05)
+    tr = FederatedTrainer(algo, adam(1e-3), Exploding(), 4,
+                          support_frac=0.5, support_size=8, query_size=8,
+                          seed=0, packed=True, over_select=0.25,
+                          pool_workers=2, pool_retries=1)
+    state = tr.init(jax.random.PRNGKey(0), _TinyModel.init)
+    with pytest.raises(WorkerPoolError, match="round 1") as ei:
+        tr.run(state, 3)
+    assert isinstance(ei.value.__cause__, OSError)
+    assert _no_pool_threads()
