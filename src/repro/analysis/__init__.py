@@ -1,0 +1,20 @@
+"""Invariant plane: repo-specific static analysis + runtime sanitizers.
+
+The repo's load-bearing guarantees — bit-identical replay across
+sync/prefetch/fused-K/resume (DESIGN.md §14–15), seeded-only
+randomness, lock-guarded shared state in `WorkerPool` / `ClientRegistry`,
+and Pallas kernel↔ref parity — are enforced here as machine-checked
+rules rather than tribal knowledge (DESIGN.md §16):
+
+  * `repro.analysis.lint` — the AST lint pass
+    (``python -m repro.analysis.lint --strict``) with four rule
+    families: RNG discipline (``rng-*``), determinism (``det-*``),
+    thread safety (``thread-*``) and Pallas contracts (``pallas-*``).
+  * `repro.analysis.sanitizers` — the opt-in runtime half: a
+    lock-assert proxy that records unguarded cross-thread access to
+    shared state, and a tracer-leak guard for the experiment plane.
+"""
+from repro.analysis.core import (LintReport, Violation, lint_paths,
+                                 lint_source)
+
+__all__ = ["LintReport", "Violation", "lint_paths", "lint_source"]

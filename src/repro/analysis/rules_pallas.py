@@ -1,0 +1,230 @@
+"""Pallas contract rules (``pallas-*``).
+
+Every Pallas kernel in this repo ships with a pure-jnp reference
+oracle, and every ``pl.pallas_call`` site encodes layout contracts the
+runtime only checks partially (wrong index-map arity fails at trace
+time on some paths, silently indexes garbage on others; an aliased
+operand read after the call observes donated/overwritten memory under
+jit). The rules make those contracts static:
+
+  pallas-grid-mismatch  every ``pl.BlockSpec`` index map at a
+                        ``pallas_call`` site must accept exactly the
+                        grid's rank (index maps may carry extra
+                        defaulted params — the closure-capture idiom
+                        ``lambda b, h, i, j, G=G: ...``), and a literal
+                        block shape must be the same rank as a literal
+                        index-map return tuple. Specs or grids that
+                        resolve outside the function are skipped, not
+                        guessed.
+  pallas-alias-reuse    ``input_output_aliases`` donates the aliased
+                        operand's buffer to the output; any read of
+                        that operand *after* the call observes
+                        overwritten memory under jit. Flags aliased
+                        operands whose base name is read in any later
+                        statement of the enclosing function.
+  pallas-missing-ref    every ``src/repro/kernels/<pkg>/`` package must
+                        ship ``ref.py`` (the oracle) and an ``ops.py``
+                        dispatcher that imports it — kernel↔ref parity
+                        is only testable when the oracle is registered
+                        in the dispatch (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Optional
+
+from repro.analysis.core import (ModuleInfo, Violation, attr_chain,
+                                 base_name, enclosing_function,
+                                 containing_stmt, project_rule, rule)
+
+
+def _kw(call: ast.Call, name: str):
+    for k in call.keywords:
+        if k.arg == name:
+            return k.value
+    return None
+
+
+def _local_assigns(fn) -> dict:
+    """name -> value expr for simple single-target assignments in the
+    function body (one level — enough for the `spec = pl.BlockSpec(...)`
+    / `grid = (B, nh, nc)` idiom)."""
+    if fn is None:
+        return {}
+    out = {}
+    for stmt in ast.walk(fn):
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 and \
+                isinstance(stmt.targets[0], ast.Name):
+            out[stmt.targets[0].id] = stmt.value
+    return out
+
+
+def _resolve(node, env: dict, depth: int = 3):
+    while isinstance(node, ast.Name) and depth > 0:
+        if node.id not in env:
+            return None
+        node = env[node.id]
+        depth -= 1
+    return node
+
+
+def _grid_rank(call: ast.Call, env: dict) -> Optional[int]:
+    grid = _resolve(_kw(call, "grid"), env)
+    if grid is None:
+        return None
+    if isinstance(grid, (ast.Tuple, ast.List)):
+        return len(grid.elts)
+    if isinstance(grid, ast.Constant) and isinstance(grid.value, int):
+        return 1
+    return None
+
+
+def _iter_specs(call: ast.Call, env: dict):
+    for kw_name in ("in_specs", "out_specs"):
+        val = _resolve(_kw(call, kw_name), env)
+        if val is None:
+            continue
+        elems = val.elts if isinstance(val, (ast.Tuple, ast.List)) \
+            else [val]
+        for e in elems:
+            e = _resolve(e, env)
+            if isinstance(e, ast.Call) and \
+                    (attr_chain(e.func) or "").endswith("BlockSpec"):
+                yield kw_name, e
+
+
+def _pallas_calls(module: ModuleInfo):
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.Call) and \
+                (attr_chain(node.func) or "").endswith("pallas_call"):
+            yield node
+
+
+@rule("pallas-grid-mismatch",
+      "BlockSpec index map inconsistent with the call's grid")
+def check_grid(module: ModuleInfo):
+    out = []
+    for call in _pallas_calls(module):
+        fn = enclosing_function(module, call)
+        env = _local_assigns(fn)
+        rank = _grid_rank(call, env)
+        for kw_name, spec in _iter_specs(call, env):
+            shape = spec.args[0] if spec.args else None
+            imap = (spec.args[1] if len(spec.args) > 1
+                    else _kw(spec, "index_map"))
+            if not isinstance(imap, ast.Lambda):
+                continue
+            required = len(imap.args.args) - len(imap.args.defaults)
+            total = len(imap.args.args)
+            if rank is not None and not (required <= rank <= total):
+                out.append(Violation(
+                    "pallas-grid-mismatch", module.relpath, spec.lineno,
+                    spec.col_offset + 1,
+                    f"{kw_name} index map takes {required} required "
+                    f"arg(s) but the grid has rank {rank} — index maps "
+                    f"receive exactly one index per grid axis"))
+            if isinstance(shape, (ast.Tuple, ast.List)) and \
+                    isinstance(imap.body, (ast.Tuple, ast.List)) and \
+                    len(shape.elts) != len(imap.body.elts):
+                out.append(Violation(
+                    "pallas-grid-mismatch", module.relpath, spec.lineno,
+                    spec.col_offset + 1,
+                    f"{kw_name} block shape has rank "
+                    f"{len(shape.elts)} but its index map returns "
+                    f"{len(imap.body.elts)} indices — block index and "
+                    f"block shape must agree per dimension"))
+    return out
+
+
+@rule("pallas-alias-reuse",
+      "aliased pallas_call operand read after the call (donated buffer)")
+def check_alias_reuse(module: ModuleInfo):
+    out = []
+    for call in _pallas_calls(module):
+        aliases = _kw(call, "input_output_aliases")
+        if not isinstance(aliases, ast.Dict):
+            continue
+        parents = module.parents()
+        outer = parents.get(call)
+        if not (isinstance(outer, ast.Call) and outer.func is call):
+            continue            # pallas_call(...) not immediately applied
+        fn = enclosing_function(module, call)
+        if fn is None:
+            continue
+        idx = containing_stmt(fn, outer)
+        if idx is None:
+            continue
+        aliased_idx = [k.value for k in aliases.keys
+                       if isinstance(k, ast.Constant)
+                       and isinstance(k.value, int)]
+        for i in aliased_idx:
+            if i >= len(outer.args):
+                continue
+            name = base_name(outer.args[i])
+            if name in (None, "self"):
+                continue
+            for later in fn.body[idx + 1:]:
+                reads = [n for n in ast.walk(later)
+                         if isinstance(n, ast.Name) and n.id == name
+                         and isinstance(n.ctx, ast.Load)]
+                if reads:
+                    out.append(Violation(
+                        "pallas-alias-reuse", module.relpath,
+                        reads[0].lineno, reads[0].col_offset + 1,
+                        f"operand {i} (`{name}`) of this pallas_call "
+                        f"is input_output-aliased (its buffer is "
+                        f"donated) but `{name}` is read after the "
+                        f"call — under jit that read observes "
+                        f"overwritten memory"))
+                    break
+    return out
+
+
+@project_rule("pallas-missing-ref",
+              "kernels/<pkg>/ without a ref.py oracle wired into ops.py")
+def check_missing_ref(modules):
+    out = []
+    pkgs = {}
+    for m in modules:
+        rel = m.relpath.replace(os.sep, "/")
+        marker = "repro/kernels/"
+        if marker not in rel:
+            continue
+        tail = rel.split(marker, 1)[1]
+        if "/" not in tail:
+            continue                     # kernels/__init__.py itself
+        pkg, fname = tail.split("/", 1)
+        pkgs.setdefault(pkg, {})[fname] = m
+    for pkg, files in sorted(pkgs.items()):
+        init = files.get("__init__.py")
+        anchor = init or next(iter(files.values()))
+        if "ref.py" not in files:
+            out.append(Violation(
+                "pallas-missing-ref", anchor.relpath, 1, 1,
+                f"kernels package `{pkg}` has no ref.py — every kernel "
+                f"family ships a pure-jnp oracle for parity tests"))
+        if "ops.py" not in files:
+            out.append(Violation(
+                "pallas-missing-ref", anchor.relpath, 1, 1,
+                f"kernels package `{pkg}` has no ops.py dispatcher"))
+            continue
+        ops = files["ops.py"]
+        imports_ref = False
+        for node in ast.walk(ops.tree):
+            if isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                if mod.endswith(".ref") or node.level and mod == "ref":
+                    imports_ref = True
+                if any(a.name == "ref" for a in node.names):
+                    imports_ref = True
+            elif isinstance(node, ast.Import):
+                if any(a.name.endswith(".ref") for a in node.names):
+                    imports_ref = True
+        if "ref.py" in files and not imports_ref:
+            out.append(Violation(
+                "pallas-missing-ref", ops.relpath, 1, 1,
+                f"kernels package `{pkg}`'s ops.py never imports its "
+                f"ref module — the oracle must be registered in the "
+                f"dispatch, not just sit next to it"))
+    return out

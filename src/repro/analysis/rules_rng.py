@@ -1,0 +1,141 @@
+"""RNG discipline rules (``rng-*``).
+
+The paper's headline numbers (2.82–4.33× less communication than
+FedAvg) are only meaningful when every method sees *identical sampling
+streams* — the experiment plane's whole design (DESIGN.md §8). One
+bare ``np.random.*`` call, one unseeded ``RandomState`` or one
+time-derived seed anywhere in a data/round path silently detaches a
+run from its stream. Policy: seeded streams (``RandomState(seed)``,
+``default_rng(seed)``) or ``SeedSequence`` entropy only.
+
+  rng-bare       module-level numpy RNG calls (``np.random.<draw>``) —
+                 global-state draws, unseedable per stream
+  rng-stdlib     any ``import random`` — the stdlib global RNG has no
+                 place in this repo
+  rng-unseeded   ``RandomState()`` / ``default_rng()`` with no
+                 arguments — seeded from the OS, never reproducible
+  rng-time-seed  a seed derived from wall-clock (``time.time``,
+                 ``datetime.now``, ``os.urandom``, ``uuid4``)
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import (ModuleInfo, Violation, attr_chain,
+                                 numpy_aliases, rule)
+
+#: numpy.random attributes that are stream constructors / entropy
+#: plumbing — everything else on the module is a global-state draw.
+ALLOWED_RANDOM_ATTRS = frozenset({
+    "RandomState", "Generator", "default_rng", "BitGenerator",
+    "MT19937", "SeedSequence", "Philox", "PCG64", "PCG64DXSM", "SFC64",
+})
+
+_RNG_CONSTRUCTORS = frozenset({"RandomState", "default_rng", "PRNGKey",
+                               "SeedSequence", "Generator", "MT19937"})
+_TIME_SOURCES = frozenset({"time.time", "time.time_ns", "datetime.now",
+                           "datetime.datetime.now", "datetime.utcnow",
+                           "datetime.datetime.utcnow", "os.urandom",
+                           "uuid.uuid4", "uuid.uuid1"})
+
+
+def _is_np_random(chain: str, aliases: dict) -> bool:
+    if chain is None:
+        return False
+    head, _, _ = chain.rpartition(".")
+    return (head in {f"{m}.random" for m in aliases["module"]}
+            or head in aliases["random"])
+
+
+@rule("rng-bare",
+      "module-level numpy RNG draw (unseedable global state)")
+def check_bare_numpy(module: ModuleInfo):
+    aliases = numpy_aliases(module.tree)
+    out = []
+    for node in ast.walk(module.tree):
+        if not isinstance(node, ast.Attribute):
+            continue
+        chain = attr_chain(node)
+        if not _is_np_random(chain, aliases):
+            continue
+        if node.attr in ALLOWED_RANDOM_ATTRS:
+            continue
+        out.append(Violation(
+            "rng-bare", module.relpath, node.lineno, node.col_offset + 1,
+            f"`{chain}` draws from numpy's global RNG — use a seeded "
+            f"`RandomState`/`default_rng` stream instead"))
+    return out
+
+
+@rule("rng-stdlib", "stdlib `random` import (global, unseeded per stream)")
+def check_stdlib_random(module: ModuleInfo):
+    out = []
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.Import):
+            names = [a.name for a in node.names]
+        elif isinstance(node, ast.ImportFrom):
+            names = [node.module or ""]
+        else:
+            continue
+        if "random" in names:
+            out.append(Violation(
+                "rng-stdlib", module.relpath, node.lineno,
+                node.col_offset + 1,
+                "stdlib `random` is banned — every stream in this repo "
+                "is an explicitly seeded numpy/jax stream"))
+    return out
+
+
+@rule("rng-unseeded", "RandomState()/default_rng() with no seed")
+def check_unseeded(module: ModuleInfo):
+    out = []
+    for node in ast.walk(module.tree):
+        if not isinstance(node, ast.Call) or node.args or node.keywords:
+            continue
+        chain = attr_chain(node.func) or ""
+        tail = chain.rpartition(".")[2]
+        if tail in ("RandomState", "default_rng"):
+            out.append(Violation(
+                "rng-unseeded", module.relpath, node.lineno,
+                node.col_offset + 1,
+                f"`{chain}()` seeds from the OS — pass an explicit "
+                f"seed (or a SeedSequence-derived bit generator)"))
+    return out
+
+
+def _time_calls(node):
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            chain = attr_chain(sub.func)
+            if chain and (chain in _TIME_SOURCES or
+                          chain.rpartition(".")[2] in ("urandom", "uuid4")):
+                yield sub, chain
+
+
+@rule("rng-time-seed", "seed derived from wall-clock / OS entropy")
+def check_time_seed(module: ModuleInfo):
+    out = []
+    for node in ast.walk(module.tree):
+        hits = []
+        if isinstance(node, ast.Call):
+            chain = attr_chain(node.func) or ""
+            is_ctor = chain.rpartition(".")[2] in _RNG_CONSTRUCTORS
+            for arg in list(node.args) + [k.value for k in node.keywords]:
+                for _, src in _time_calls(arg):
+                    kw_seed = any(k.arg and "seed" in k.arg.lower()
+                                  and any(_time_calls(k.value))
+                                  for k in node.keywords)
+                    if is_ctor or kw_seed:
+                        hits.append(src)
+        elif isinstance(node, ast.Assign):
+            targets = [t.id for t in node.targets
+                       if isinstance(t, ast.Name)]
+            if any("seed" in t.lower() for t in targets):
+                hits.extend(src for _, src in _time_calls(node.value))
+        for src in hits:
+            out.append(Violation(
+                "rng-time-seed", module.relpath, node.lineno,
+                node.col_offset + 1,
+                f"seed derived from `{src}` — wall-clock/OS entropy "
+                f"seeds are unreproducible; thread an explicit seed"))
+    return out

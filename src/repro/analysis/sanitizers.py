@@ -1,0 +1,217 @@
+"""Runtime sanitizers — the dynamic half of the invariant plane.
+
+The lint rules prove lock discipline *lexically*; these sanitizers
+prove it *at runtime*, catching what static analysis structurally
+cannot (writes through helpers, monkeypatched methods, attribute
+access from code the linter never saw):
+
+  * :func:`guard_shared_state` — swaps an object's lock for a
+    `SanitizedLock` (same blocking semantics, plus owner tracking) and
+    its class for a recording subclass whose ``__setattr__`` logs every
+    guarded-attribute write performed without holding the lock.
+    :func:`cross_thread_violations` then returns the unguarded writes
+    made off the owning thread — the data races. Overhead is one dict
+    lookup per attribute write; strictly opt-in (tests, debug runs).
+  * :func:`no_tracer_leaks` / :func:`assert_no_tracers` — the
+    experiment plane's tracer-leak guard: history records and artifact
+    payloads must hold host floats, never ``jax.core.Tracer``s (a
+    tracer in a record means a jitted function leaked an abstract value
+    out of its trace — it would poison every later ``float()`` and
+    checkpoint). The context manager additionally turns on JAX's own
+    leak checking around a block.
+
+Opt-in wiring: ``REPRO_SANITIZE=1`` makes the experiment plane run the
+tracer guard on every record it flushes (see
+``federated/experiment.py``); the lock sanitizer is constructed
+explicitly by tests/tools (see ``tests/test_sanitizers.py``).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import threading
+import traceback
+from typing import List, Optional
+
+
+def sanitizers_enabled() -> bool:
+    """True when ``REPRO_SANITIZE=1`` — the opt-in env gate."""
+    return os.environ.get("REPRO_SANITIZE", "") == "1"
+
+
+class UnguardedAccessError(AssertionError):
+    """Shared state was written without the class's lock held."""
+
+
+class TracerLeakError(AssertionError):
+    """A jax tracer escaped into host-side state."""
+
+
+class SanitizedLock:
+    """`threading.Lock` work-alike that records its owning thread.
+
+    ``held_by_me()`` answers the question a plain Lock cannot:
+    *does the current thread hold this lock* (``locked()`` only says
+    somebody does). Context-manager and acquire/release compatible with
+    the ``with self._lock:`` sites it replaces.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._owner: Optional[int] = None
+
+    def acquire(self, blocking: bool = True, timeout: float = -1):
+        got = self._lock.acquire(blocking, timeout)
+        if got:
+            self._owner = threading.get_ident()
+        return got
+
+    def release(self):
+        self._owner = None
+        self._lock.release()
+
+    def held_by_me(self) -> bool:
+        return self._owner == threading.get_ident()
+
+    def locked(self) -> bool:
+        return self._lock.locked()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class UnguardedWrite:
+    attr: str
+    thread_id: int
+    thread_name: str
+    owner_thread: int
+    where: str            # "file:line in func" of the writing frame
+
+    @property
+    def cross_thread(self) -> bool:
+        return self.thread_id != self.owner_thread
+
+
+_RECORDS_ATTR = "__repro_sanitizer_records__"
+_LOCK_ATTR = "__repro_sanitizer_lock_attr__"
+_OWNER_ATTR = "__repro_sanitizer_owner__"
+
+
+def guard_shared_state(obj, lock_attr: str = "_lock",
+                       guarded=None):
+    """Instrument ``obj`` so unguarded writes to shared state are
+    recorded (not blocked — the sanitizer observes, the test asserts).
+
+    The object's ``lock_attr`` is replaced with a `SanitizedLock` (it
+    must not be held during the swap) and its class with a one-off
+    recording subclass. ``guarded`` selects the attributes under
+    contract; None means every underscore-prefixed attribute except the
+    lock itself. Returns ``obj``. Example::
+
+        reg = ClientRegistry(src, 10, cache_clients=8)
+        guard_shared_state(reg)
+        pool.map(range(64))                  # hammer it from K threads
+        assert not cross_thread_violations(reg)
+    """
+    lock = getattr(obj, lock_attr, None)
+    if lock is not None and getattr(lock, "locked", lambda: False)():
+        raise RuntimeError("cannot instrument while the lock is held")
+    records: List[UnguardedWrite] = []
+    base = type(obj)
+    guarded_set = None if guarded is None else frozenset(guarded)
+
+    def _guarded(name: str) -> bool:
+        if name.startswith("__repro_sanitizer"):
+            return False
+        if name == lock_attr:
+            return False
+        if guarded_set is not None:
+            return name in guarded_set
+        return name.startswith("_")
+
+    class Guarded(base):
+        def __setattr__(self, name, value):
+            if _guarded(name):
+                sl = self.__dict__.get(lock_attr)
+                if isinstance(sl, SanitizedLock) and not sl.held_by_me():
+                    frame = traceback.extract_stack(limit=3)[0]
+                    records.append(UnguardedWrite(
+                        attr=name,
+                        thread_id=threading.get_ident(),
+                        thread_name=threading.current_thread().name,
+                        owner_thread=getattr(
+                            self, _OWNER_ATTR, threading.get_ident()),
+                        where=f"{frame.filename}:{frame.lineno} "
+                              f"in {frame.name}"))
+            object.__setattr__(self, name, value)
+
+    Guarded.__name__ = f"Sanitized{base.__name__}"
+    Guarded.__qualname__ = Guarded.__name__
+    object.__setattr__(obj, _OWNER_ATTR, threading.get_ident())
+    object.__setattr__(obj, _RECORDS_ATTR, records)
+    object.__setattr__(obj, _LOCK_ATTR, lock_attr)
+    object.__setattr__(obj, lock_attr, SanitizedLock())
+    obj.__class__ = Guarded
+    return obj
+
+
+def unguarded_writes(obj) -> List[UnguardedWrite]:
+    """Every recorded unguarded write (any thread)."""
+    return list(getattr(obj, _RECORDS_ATTR, []))
+
+
+def cross_thread_violations(obj) -> List[UnguardedWrite]:
+    """Unguarded writes made off the owning thread — the races the
+    thread-safety invariant (DESIGN.md §15/§16) forbids."""
+    return [r for r in unguarded_writes(obj) if r.cross_thread]
+
+
+def assert_guarded(obj, *, cross_thread_only: bool = True):
+    """Raise `UnguardedAccessError` listing every recorded violation."""
+    bad = (cross_thread_violations(obj) if cross_thread_only
+           else unguarded_writes(obj))
+    if bad:
+        lines = [f"  {r.attr!r} by {r.thread_name} at {r.where}"
+                 for r in bad[:20]]
+        raise UnguardedAccessError(
+            f"{len(bad)} unguarded shared-state write(s) on "
+            f"{type(obj).__name__}:\n" + "\n".join(lines))
+
+
+# ---- tracer-leak guard (experiment plane) -------------------------------
+
+def _tracer_type():
+    import jax
+    return jax.core.Tracer
+
+
+def assert_no_tracers(tree, where: str = "") -> None:
+    """Raise `TracerLeakError` if any leaf of ``tree`` is a jax Tracer.
+
+    ``tree`` is anything ``jax.tree.leaves`` accepts — a history
+    record, a results dict, a checkpoint payload."""
+    import jax
+    tracer = _tracer_type()
+    for leaf in jax.tree.leaves(tree):
+        if isinstance(leaf, tracer):
+            raise TracerLeakError(
+                f"jax tracer leaked into host-side state"
+                f"{f' ({where})' if where else ''}: {leaf!r} — a jitted "
+                f"function let an abstract value escape its trace")
+
+
+@contextlib.contextmanager
+def no_tracer_leaks():
+    """Context manager arming JAX's own transform-level leak checking
+    for the enclosed block (compose with `assert_no_tracers` for
+    host-side containers)."""
+    import jax
+    with jax.check_tracer_leaks():
+        yield

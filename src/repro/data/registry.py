@@ -74,6 +74,9 @@ class SequentialClientSource:
                 warm(i, c)         # don't waste the construction pass
 
     def get(self, i: int) -> ClientData:
+        # the constructor's OS-entropy state is dead on arrival:
+        # set_state installs client i's snapshot before any draw
+        # repro-lint: disable=rng-unseeded (state replaced by set_state)
         rng = np.random.RandomState()
         rng.set_state(self._snaps[i])
         return self._body(rng)
@@ -117,6 +120,17 @@ class ClientRegistry:
     ``cache_clients=None`` means unbounded (every touched client stays
     resident — the eager-equivalent memory mode); an integer bounds the
     resident set and `cache_stats()["peak_resident"]` proves it.
+
+    Lock-order contract (audited with `async_engine.WorkerPool`, whose
+    docstring states the full pool↔registry ordering): ``self._lock``
+    is a **leaf** lock guarding only the cache dict, the in-flight map
+    and the counters. It is never held across a blocking call — the
+    in-flight ``Event.wait`` in ``__getitem__`` and the
+    ``source.get(i)`` synthesis both run with the lock released, so a
+    worker synthesizing client i can always reach ``_insert`` (which
+    re-acquires the lock to publish and ``set()`` the Event). Holding
+    the lock around either would strand every waiter of that Event —
+    the inversion the ``thread-lock-order`` lint rule exists to catch.
     """
 
     def __init__(self, source, num_classes: int, name: str = "registry",

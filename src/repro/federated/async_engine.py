@@ -189,6 +189,13 @@ class Prefetcher:
     must leave its seeded streams where they started (the trainers
     snapshot/restore their RNGs around staging). ``first_round`` only
     labels error messages — the round numbering a resumed run is at.
+
+    Lock-order contract (see `WorkerPool` for the full ordering): the
+    producer↔consumer handoff itself rides the queue and the stop
+    Event; ``self._lock`` guards exactly one plain attribute — the
+    stored producer error — and is a *leaf* lock: both sides take it
+    only around the ``_error`` read/write, never around ``put``/``get``
+    or any other blocking call.
     """
 
     def __init__(self, produce: Callable, sizes, depth: int, *,
@@ -201,6 +208,10 @@ class Prefetcher:
         self._max_retries = max(0, max_retries)
         self._retry_backoff = retry_backoff
         self._first_round = first_round
+        # leaf lock for _error: written on the producer thread, read on
+        # the consumer thread after observing producer death — the
+        # handoff is otherwise unsynchronized (thread-unguarded-write)
+        self._lock = threading.Lock()
         self._error: Optional[BaseException] = None
         self._thread = threading.Thread(
             target=self._run, name=PREFETCH_THREAD_NAME, daemon=True)
@@ -249,14 +260,16 @@ class Prefetcher:
                 if item is None:
                     return
                 if item[0] is not None:
-                    self._error = item[0]
+                    with self._lock:
+                        self._error = item[0]
                     self._put(item)
                     return
                 if not self._put(item):
                     return
                 r += k
         except BaseException as exc:  # pragma: no cover - safety net
-            self._error = exc
+            with self._lock:
+                self._error = exc
             self._put((exc, None))
 
     def get(self):
@@ -268,8 +281,10 @@ class Prefetcher:
                 if not self._thread.is_alive():
                     # the producer died without staging this block; the
                     # stored error (if any) beats a blind deadlock
-                    if self._error is not None:
-                        raise self._error
+                    with self._lock:
+                        err = self._error
+                    if err is not None:
+                        raise err
                     raise PrefetchError(
                         "prefetch producer thread exited without "
                         "staging the requested block")
@@ -292,6 +307,16 @@ class Prefetcher:
 
 
 class _PoolTask:
+    """One queued unit of pool work.
+
+    Publication protocol (audited, DESIGN.md §16): ``result`` and
+    ``error`` are written by exactly one worker *before* ``done.set()``
+    and read by the gather side only *after* ``done`` is observed set —
+    the Event is the happens-before edge, so neither field needs a
+    lock. ``started_at`` is the one deliberately racy field: the worker
+    publishes it unsynchronized and the gather side polls it purely to
+    arm the task-timeout clock; a stale read can only delay timeout
+    detection by one 50 ms poll tick, never corrupt a result."""
     __slots__ = ("item", "result", "error", "started_at", "done")
 
     def __init__(self, item):
@@ -337,6 +362,28 @@ class WorkerPool:
             shards = pool.map([3, 17, 42], label="round 7")
         finally:
             pool.close()
+
+    **Acquired-order contract** (the lock-ordering audit the
+    ``thread-lock-order`` lint rule stubs; DESIGN.md §16). Three
+    blocking primitives meet when the pool materializes registry
+    shards: the gather side's per-task ``done`` Events, the registry's
+    per-client in-flight Events, and ``ClientRegistry._lock``. The
+    deadlock-free order is::
+
+        gather (map): wait on task.done        — holding NO locks
+        worker (fn):  registry.__getitem__
+                        acquire _lock          — leaf: hash/cache ops
+                                                 only, released before
+                                                 ANY blocking call
+                        wait on in-flight Event — lock NOT held
+                        source.get(i)           — lock NOT held
+
+    i.e. every Event wait is lock-free and the registry lock is a leaf
+    acquired strictly *after* all Event-level blocking. The forbidden
+    inversion — holding ``_lock`` while waiting on an in-flight Event
+    or a pool gather — parks the only thread that could ``set()`` the
+    Event behind the lock it needs, which is exactly the shape the
+    lint rule flags.
     """
 
     def __init__(self, fn: Callable, workers: int = 2, *,

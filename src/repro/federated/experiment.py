@@ -48,6 +48,7 @@ from typing import Callable, Optional, Sequence
 
 import jax
 
+from repro.analysis.sanitizers import assert_no_tracers, sanitizers_enabled
 from repro.federated.fedavg import FedAvgTrainer
 from repro.federated.faults import FaultConfig
 from repro.federated.population import UnreliabilityConfig
@@ -564,10 +565,12 @@ def run_comparison(plan: ExperimentPlan, out_dir: str = "results/experiments",
                           view.train)
         state = tr.init(jax.random.PRNGKey(plan.seed), view.model.init)
         tr.measure_flops(state)
-        t0 = time.time()
+        # perf_counter, not time.time: interval timing is the only
+        # wall-clock this module is allowed (det-wallclock invariant)
+        t0 = time.perf_counter()
         state = tr.run(state, plan.rounds, eval_every=plan.eval_every,
                        eval_clients=val)
-        seconds = time.time() - t0
+        seconds = time.perf_counter() - t0
         # reuse the trainer's jitted evaluator — a fresh one would
         # recompile the whole adapt+eval graph for the test pass
         if method in FEDAVG_METHODS:
@@ -589,6 +592,12 @@ def run_comparison(plan: ExperimentPlan, out_dir: str = "results/experiments",
             "fairness": fairness_stats(per_client),
             "comm": tr.comm.summary(), "seconds": seconds,
         }
+        if sanitizers_enabled():
+            # invariant plane (DESIGN.md §16): everything entering the
+            # artifact must be host data — a tracer here means a jitted
+            # step leaked an abstract value into history
+            assert_no_tracers(results[method],
+                              where=f"{plan.dataset}/{method} record")
         say(f"[{plan.dataset}] {method}: test_acc={test_acc:.4f} "
             f"comm_MB={tr.comm.summary()['comm_MB']:.2f} "
             f"phi_MB={tr.comm.summary()['phi_MB']:.4f} ({seconds:.0f}s)")

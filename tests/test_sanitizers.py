@@ -1,0 +1,161 @@
+"""Runtime-sanitizer tests — the dynamic half of the invariant plane.
+
+The lock-assert sanitizer wraps a live `ClientRegistry` and is
+exercised two ways under a K=8 `WorkerPool`: the real registry (every
+shared-state write under its leaf lock → zero violations) and a
+planted unguarded write (→ detected, attributed to a worker thread,
+and fatal under `assert_guarded`). Plus the tracer-leak guard the
+experiment plane runs under REPRO_SANITIZE=1."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.analysis.sanitizers import (SanitizedLock, TracerLeakError,
+                                       UnguardedAccessError,
+                                       assert_guarded, assert_no_tracers,
+                                       cross_thread_violations,
+                                       guard_shared_state, no_tracer_leaks,
+                                       sanitizers_enabled,
+                                       unguarded_writes)
+from repro.data.federated import ClientData
+from repro.data.registry import ClientRegistry, IndependentClientSource
+from repro.federated.async_engine import WorkerPool
+
+K = 8          # worker threads — the ISSUE's K=8 contract
+N_CLIENTS = 64
+
+
+def tiny_client(rng) -> ClientData:
+    x = rng.normal(size=(6, 3)).astype(np.float32)
+    y = rng.randint(0, 3, size=6)
+    return ClientData(x, y)
+
+
+def make_registry(cache=16) -> ClientRegistry:
+    src = IndependentClientSource(tiny_client, N_CLIENTS, seed=7)
+    return ClientRegistry(src, num_classes=3, cache_clients=cache)
+
+
+# ---- SanitizedLock -------------------------------------------------------
+
+class TestSanitizedLock:
+    def test_held_by_me_tracks_owner(self):
+        lock = SanitizedLock()
+        assert not lock.held_by_me()
+        with lock:
+            assert lock.held_by_me() and lock.locked()
+        assert not lock.held_by_me() and not lock.locked()
+
+    def test_other_thread_is_not_owner(self):
+        lock = SanitizedLock()
+        seen = {}
+        with lock:
+            t = threading.Thread(
+                target=lambda: seen.update(held=lock.held_by_me()))
+            t.start()
+            t.join()
+        assert seen["held"] is False
+
+
+# ---- lock-assert sanitizer under K=8 workers ----------------------------
+
+class TestGuardSharedState:
+    def test_clean_registry_has_no_violations_under_k8(self):
+        """The real registry, hammered by K=8 workers: every write to
+        cache/counters goes through `with self._lock:` → the sanitizer
+        records nothing. This is the invariant the thread-unguarded-
+        write lint rule proves lexically, proven dynamically."""
+        reg = guard_shared_state(make_registry(cache=8))
+        pool = WorkerPool(lambda i: reg[i].n, workers=K)
+        try:
+            # 3 passes over the id space: misses, hits and evictions
+            ids = list(range(N_CLIENTS)) * 3
+            out = pool.map(ids, label="sanitizer-smoke")
+        finally:
+            pool.close()
+        assert len(out) == len(ids)
+        assert cross_thread_violations(reg) == []
+        assert_guarded(reg)      # must not raise
+        stats = reg.cache_stats()
+        assert stats["hits"] + stats["misses"] >= len(ids)
+
+    def test_planted_unguarded_write_detected_under_k8(self):
+        """Plant the race the sanitizer exists for: workers bump a
+        counter attribute *without* taking the registry lock."""
+        reg = guard_shared_state(make_registry(cache=8))
+
+        def racy(i):
+            n = reg[i].n          # legal, lock-guarded path
+            reg._hits = reg._hits  # unguarded shared-state write
+            return n
+
+        pool = WorkerPool(racy, workers=K)
+        try:
+            pool.map(list(range(N_CLIENTS)), label="planted-race")
+        finally:
+            pool.close()
+        bad = cross_thread_violations(reg)
+        assert bad, "planted unguarded write was not detected"
+        assert all(v.attr == "_hits" and v.cross_thread for v in bad)
+        assert any("worker" in v.thread_name for v in bad)
+        with pytest.raises(UnguardedAccessError) as ei:
+            assert_guarded(reg)
+        assert "_hits" in str(ei.value)
+
+    def test_owner_thread_unguarded_write_recorded_not_cross(self):
+        reg = guard_shared_state(make_registry())
+        reg._peak = 99            # unguarded, but on the owning thread
+        assert unguarded_writes(reg) and not cross_thread_violations(reg)
+        assert_guarded(reg)                       # cross-thread only
+        with pytest.raises(UnguardedAccessError):
+            assert_guarded(reg, cross_thread_only=False)
+
+    def test_registry_still_correct_after_instrumentation(self):
+        plain, wrapped = make_registry(), guard_shared_state(make_registry())
+        for i in (0, 17, 63):
+            np.testing.assert_array_equal(plain[i].x, wrapped[i].x)
+        assert type(wrapped).__name__ == "SanitizedClientRegistry"
+
+    def test_guard_refuses_held_lock(self):
+        reg = make_registry()
+        with reg._lock:
+            with pytest.raises(RuntimeError):
+                guard_shared_state(reg)
+
+
+# ---- tracer-leak guard ---------------------------------------------------
+
+class TestTracerGuard:
+    def test_leaked_tracer_detected(self):
+        jax = pytest.importorskip("jax")
+        import jax.numpy as jnp
+        leak = []
+
+        @jax.jit
+        def step(x):
+            leak.append(x * 2)    # abstract value escapes the trace
+            return x + 1
+
+        step(jnp.ones(3))
+        with pytest.raises(TracerLeakError) as ei:
+            assert_no_tracers({"history": leak}, where="fixture record")
+        assert "fixture record" in str(ei.value)
+
+    def test_host_data_passes(self):
+        pytest.importorskip("jax")
+        record = {"round": 3, "acc": 0.91,
+                  "phi": [np.zeros(4), np.ones(2)]}
+        assert_no_tracers(record)      # must not raise
+
+    def test_no_tracer_leaks_context_smoke(self):
+        jax = pytest.importorskip("jax")
+        import jax.numpy as jnp
+        with no_tracer_leaks():
+            assert float(jax.jit(lambda x: x * 2)(jnp.ones(()))) == 2.0
+
+    def test_env_gate(self, monkeypatch):
+        monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+        assert not sanitizers_enabled()
+        monkeypatch.setenv("REPRO_SANITIZE", "1")
+        assert sanitizers_enabled()
