@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import numpy as np
@@ -225,6 +226,7 @@ def run(*, dry: bool = False, interpret: bool = False, reps: int = 10,
         "rows": rows,
         "summary": _summarize(rows),
     }
+    os.makedirs(os.path.dirname(json_out) or ".", exist_ok=True)
     with open(json_out, "w") as f:
         json.dump(report, f, indent=2)
     print(f"wrote {json_out}", flush=True)
@@ -321,12 +323,12 @@ def main():
     ap.add_argument("--reps", type=int, default=10)
     ap.add_argument("--out", default=None,
                     help="output JSON (default: the committed artifact "
-                         "for full runs, a _smoke variant for --dry-run "
-                         "so a doc-following smoke cannot clobber the "
-                         "full-run numbers)")
+                         "for full runs, the gitignored smoke/ dir for "
+                         "--dry-run so a doc-following smoke cannot "
+                         "clobber the full-run numbers)")
     args = ap.parse_args()
     if args.out is None:
-        args.out = ("results/bench/BENCH_meta_step_smoke.json"
+        args.out = ("results/bench/smoke/BENCH_meta_step.json"
                     if args.dry_run
                     else "results/bench/BENCH_meta_step.json")
     run(dry=args.dry_run, interpret=args.interpret, reps=args.reps,

@@ -170,6 +170,94 @@ def _bench_async(scale_key: str, reps: int):
     return rows
 
 
+# bytes-on-the-wire section (DESIGN.md §17): same driver bench, upload
+# codec axis. Each variant reruns the identical seeded driver loop with
+# a different wire format; rows record the measured wall per round AND
+# the codec-true per-client upload bytes, so the summary shows the
+# compression multiplier compounding (bf16 2×, int8 ~4×, top-5% bf16
+# values ~13× vs dense f32).
+COMM_VARIANTS = (
+    ("f32", {}),
+    ("bf16", dict(block_dtype="bfloat16")),
+    ("int8+ef", dict(codec="int8")),
+    ("topk0.05+ef", dict(codec="topk", block_dtype="bfloat16")),
+)
+
+
+def _bench_comm(scale_key: str, reps: int):
+    """Wall time per round + true upload bytes per client, per codec."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.data.federated import ClientData
+    from repro.federated.server import FederatedTrainer
+    from repro.kernels.meta_update.compress import CompressionConfig
+    from repro.optim import adam
+
+    cfg = ASYNC_SCALES[scale_key]
+    algo, model_init, *_ = _build_task(
+        SCALES[cfg["model"]], cfg["m"], cfg["batch"], algo_name="fomaml",
+        inner_steps=INNER_STEPS)
+    rng = np.random.RandomState(0)
+    D = SCALES[cfg["model"]]["in_dim"]
+    clients = [
+        ClientData(rng.normal(0, 1, (cfg["client_samples"], D))
+                   .astype(np.float32),
+                   rng.normal(0, 1, (cfg["client_samples"], D))
+                   .astype(np.float32))
+        for _ in range(cfg["pool"])]
+
+    rows = []
+    for name, knobs in COMM_VARIANTS:
+        kw = {}
+        if knobs.get("block_dtype"):
+            kw["block_dtype"] = jnp.dtype(knobs["block_dtype"])
+        if knobs.get("codec"):
+            kw["compression"] = CompressionConfig(
+                knobs["codec"], topk_frac=0.05)
+        tr = FederatedTrainer(
+            algo, adam(1e-3), clients, cfg["m"], support_frac=0.5,
+            support_size=cfg["batch"], query_size=cfg["batch"], seed=0,
+            packed=True, **kw)
+        state = tr.init(jax.random.PRNGKey(0), model_init)
+        state = tr.run(state, cfg["warmup"])
+        walls = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            state = tr.run(state, cfg["rounds"])
+            walls.append((time.perf_counter() - t0) / cfg["rounds"])
+        per_client = (tr.comm.grad_bytes if tr.comm.grad_bytes is not None
+                      else tr.comm.phi_bytes)
+        rows.append({"scale": scale_key, "variant": name,
+                     "codec": tr.comm.codec,
+                     "wall_ms_per_round": float(np.min(walls) * 1e3),
+                     "upload_bytes_per_client": int(per_client),
+                     "phi_bytes": int(tr.comm.phi_bytes),
+                     "rounds_timed": cfg["rounds"] * reps})
+        print(f"round.comm.{scale_key}.{name},"
+              f"{rows[-1]['wall_ms_per_round'] * 1e3:.0f},"
+              f"upload_B={per_client}", flush=True)
+    return rows
+
+
+def _summarize_comm(comm_rows):
+    if not comm_rows:
+        return {}
+    base = next((r for r in comm_rows if r["variant"] == "f32"), None)
+    if base is None:
+        return {}
+    out = {"upload_bytes_per_client": {
+        r["variant"]: r["upload_bytes_per_client"] for r in comm_rows}}
+    for r in comm_rows:
+        if r["variant"] != "f32":
+            out[f"upload_multiplier_{r['variant']}"] = round(
+                base["upload_bytes_per_client"]
+                / r["upload_bytes_per_client"], 2)
+            out[f"wall_overhead_{r['variant']}"] = round(
+                r["wall_ms_per_round"] / base["wall_ms_per_round"], 3)
+    return {"comm": out}
+
+
 POPULATION_SIZES = (1_000, 10_000, 100_000)
 POPULATION_SIZES_DRY = (200, 1_000)
 
@@ -331,6 +419,8 @@ def run(*, dry: bool = False, reps: int = 10, algo_name: str = "fomaml",
 
     async_rows = _bench_async("tiny" if dry else "large",
                               reps=1 if dry else 2)
+    comm_rows = _bench_comm("tiny" if dry else "large",
+                            reps=1 if dry else 2)
     pop_rows = _bench_population(dry)
 
     report = {
@@ -341,10 +431,13 @@ def run(*, dry: bool = False, reps: int = 10, algo_name: str = "fomaml",
         "reps": reps,
         "rows": rows,
         "async_rows": async_rows,
+        "comm_rows": comm_rows,
         "population_rows": pop_rows,
         "summary": {**_summarize(rows, async_rows),
+                    **_summarize_comm(comm_rows),
                     **_summarize_population(pop_rows)},
     }
+    os.makedirs(os.path.dirname(json_out) or ".", exist_ok=True)
     with open(json_out, "w") as f:
         json.dump(report, f, indent=2)
     print(f"wrote {json_out}", flush=True)
@@ -354,18 +447,30 @@ def run(*, dry: bool = False, reps: int = 10, algo_name: str = "fomaml",
 def run_population_only(*, dry: bool = False, json_out: str):
     """Run just the population section and merge it into an existing
     report (the other sections' committed numbers are left untouched)."""
-    pop_rows = _bench_population(dry)
+    return _run_section_only("population_rows", _bench_population(dry),
+                             _summarize_population, dry=dry,
+                             json_out=json_out)
+
+
+def run_comm_only(*, dry: bool = False, json_out: str):
+    """Run just the bytes-on-the-wire section (§17) and merge it into an
+    existing report, population-only style."""
+    rows = _bench_comm("tiny" if dry else "large", reps=1 if dry else 2)
+    return _run_section_only("comm_rows", rows, _summarize_comm,
+                             dry=dry, json_out=json_out)
+
+
+def _run_section_only(key, rows, summarize, *, dry, json_out):
     report = {"bench": "round", "dry_run": dry, "summary": {}}
     if os.path.exists(json_out):
         with open(json_out) as f:
             report = json.load(f)
-    report["population_rows"] = pop_rows
-    report.setdefault("summary", {}).update(
-        _summarize_population(pop_rows))
+    report[key] = rows
+    report.setdefault("summary", {}).update(summarize(rows))
     os.makedirs(os.path.dirname(json_out) or ".", exist_ok=True)
     with open(json_out, "w") as f:
         json.dump(report, f, indent=2)
-    print(f"wrote {json_out} (population section merged)", flush=True)
+    print(f"wrote {json_out} ({key} section merged)", flush=True)
     return report
 
 
@@ -455,6 +560,10 @@ def main():
     ap.add_argument("--population-only", action="store_true",
                     help="run just the population-scaling section and "
                          "merge it into the existing --out report")
+    ap.add_argument("--comm-only", action="store_true",
+                    help="run just the bytes-on-the-wire (codec) "
+                         "section and merge it into the existing --out "
+                         "report")
     ap.add_argument("--population-child", type=int, default=0,
                     help=argparse.SUPPRESS)   # internal: subprocess mode
     ap.add_argument("--population-rounds", type=int, default=20,
@@ -467,12 +576,12 @@ def main():
                          "physical core count for a fair sharded row)")
     ap.add_argument("--out", default=None,
                     help="output JSON (default: the committed artifact "
-                         "for full runs, a _smoke variant for --dry-run "
-                         "so a doc-following smoke cannot clobber the "
-                         "full-run numbers)")
+                         "for full runs, the gitignored smoke/ dir for "
+                         "--dry-run so a doc-following smoke cannot "
+                         "clobber the full-run numbers)")
     args = ap.parse_args()
     if args.out is None:
-        args.out = ("results/bench/BENCH_round_smoke.json" if args.dry_run
+        args.out = ("results/bench/smoke/BENCH_round.json" if args.dry_run
                     else "results/bench/BENCH_round.json")
     if args.population_child:
         print(json.dumps(_population_child(
@@ -481,6 +590,9 @@ def main():
         return
     if args.population_only:
         run_population_only(dry=args.dry_run, json_out=args.out)
+        return
+    if args.comm_only:
+        run_comm_only(dry=args.dry_run, json_out=args.out)
         return
     if args.devices:
         import os

@@ -78,6 +78,12 @@ def main() -> None:
     ap.add_argument("--outdir", default="results/bench")
     args = ap.parse_args()
     os.makedirs(args.outdir, exist_ok=True)
+    # reduced (non---full) runs write ONLY under this gitignored smoke
+    # dir — a doc-following smoke run can never shadow (or accidentally
+    # get committed next to) a real artifact
+    smoke_dir = os.path.join(args.outdir, "smoke")
+    if not args.full:
+        os.makedirs(smoke_dir, exist_ok=True)
     only = set(args.only.split(","))
     rounds = args.rounds or (400 if args.full else 120)
 
@@ -90,11 +96,11 @@ def main() -> None:
         from benchmarks import meta_step_bench
         t0 = time.time()
         # the committed perf-trajectory artifact lives in outdir; a
-        # reduced run writes a _smoke variant so it cannot clobber the
-        # full-run numbers
-        out = os.path.join(args.outdir,
-                           "BENCH_meta_step.json" if args.full
-                           else "BENCH_meta_step_smoke.json")
+        # reduced run writes into the gitignored smoke/ subdir so it
+        # cannot clobber the full-run numbers
+        out = (os.path.join(args.outdir, "BENCH_meta_step.json")
+               if args.full
+               else os.path.join(smoke_dir, "BENCH_meta_step.json"))
         report = meta_step_bench.run(dry=not args.full, json_out=out)
         spd = report["summary"].get("wall_speedup_packed_vs_tree_vmap")
         print(f"meta_step,{(time.time()-t0)*1e6:.0f},"
@@ -103,9 +109,9 @@ def main() -> None:
     if "round" in only:
         from benchmarks import round_bench
         t0 = time.time()
-        out = os.path.join(args.outdir,
-                           "BENCH_round.json" if args.full
-                           else "BENCH_round_smoke.json")
+        out = (os.path.join(args.outdir, "BENCH_round.json")
+               if args.full
+               else os.path.join(smoke_dir, "BENCH_round.json"))
         report = round_bench.run(dry=not args.full, json_out=out)
         spd = report["summary"].get("round_speedup_client_plane_vs_packed")
         aspd = report["summary"].get("async_speedup")
@@ -117,19 +123,20 @@ def main() -> None:
     if "experiment" in only:
         from benchmarks import experiment_bench
         t0 = time.time()
-        # smoke summary goes to a _smoke path — must not clobber the
-        # committed full-run numbers (same guard as the other benches) —
-        # and ALL artifacts stay under --outdir (the committed
-        # results/experiments/ refresh goes through experiment_bench /
-        # examples/compare_fedmeta_fedavg.py directly)
-        out = os.path.join(args.outdir,
-                           "experiment_summary.json" if args.full
-                           else "experiment_summary_smoke.json")
+        # smoke summary goes into the gitignored smoke/ dir — must not
+        # clobber the committed full-run numbers (same guard as the
+        # other benches) — and ALL artifacts stay under --outdir (the
+        # committed results/experiments/ refresh goes through
+        # experiment_bench / examples/compare_fedmeta_fedavg.py
+        # directly)
+        out = (os.path.join(args.outdir, "experiment_summary.json")
+               if args.full
+               else os.path.join(smoke_dir, "experiment_summary.json"))
         summary = experiment_bench.run(
             dry=not args.full, json_out=out,
-            out_dir=os.path.join(args.outdir,
-                                 "experiments" if args.full
-                                 else "experiments-smoke"))
+            out_dir=(os.path.join(args.outdir, "experiments")
+                     if args.full
+                     else os.path.join(smoke_dir, "experiments")))
         # headline = best FEDMETA reduction; fedavg(meta) is a baseline.
         # ">=x" strings mark lower bounds and survive into the headline.
         reds = [v for s in summary.values()

@@ -18,6 +18,8 @@ import argparse
 from repro.federated.experiment import (DEFAULT_METHODS, default_plan,
                                         format_table, run_comparison)
 from repro.federated.faults import FaultConfig
+from repro.federated.privacy import DPConfig
+from repro.kernels.meta_update.compress import CompressionConfig
 
 
 def main():
@@ -78,6 +80,25 @@ def main():
     ap.add_argument("--eval-clients-cap", type=int, default=0,
                     help="cap on val/test eval cohort size (large lazy "
                          "populations)")
+    ap.add_argument("--codec", default="",
+                    choices=["", "int8", "topk"],
+                    help="FedMeta upload compression (DESIGN.md §17; "
+                         "needs a packed pipeline)")
+    ap.add_argument("--topk-frac", type=float, default=0.05,
+                    help="fraction of real parameters each client "
+                         "transmits under --codec topk")
+    ap.add_argument("--no-error-feedback", action="store_true",
+                    help="disable the per-client EF residual state")
+    ap.add_argument("--block-dtype", default="",
+                    help="packed gradient-block wire dtype (e.g. "
+                         "bfloat16; also the top-k value dtype)")
+    ap.add_argument("--opt-state-dtype", default="",
+                    help="fused-Adam m/v state dtype (e.g. bfloat16 — "
+                         "dequantized in-kernel)")
+    ap.add_argument("--dp-clip-norm", type=float, default=0.0,
+                    help="central-DP per-client L2 clip (0 = off)")
+    ap.add_argument("--dp-noise-multiplier", type=float, default=0.0,
+                    help="central-DP noise multiplier z (σ = z·S/m)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--outdir", default="results/experiments")
     ap.add_argument("--dry-run", action="store_true",
@@ -110,6 +131,18 @@ def main():
             fail_rate=args.unreliable_fail_rate, seed=args.seed)
     if args.pool_workers:
         over["pool_workers"] = args.pool_workers
+    if args.codec:
+        over["compression"] = CompressionConfig(
+            args.codec, topk_frac=args.topk_frac,
+            error_feedback=not args.no_error_feedback)
+    if args.block_dtype:
+        over["block_dtype"] = args.block_dtype
+    if args.opt_state_dtype:
+        over["opt_state_dtype"] = args.opt_state_dtype
+    if args.dp_clip_norm:
+        over["dp"] = DPConfig(clip_norm=args.dp_clip_norm,
+                              noise_multiplier=args.dp_noise_multiplier,
+                              seed=args.seed)
     if args.eval_clients_cap:
         over["eval_clients_cap"] = args.eval_clients_cap
     if args.clients:

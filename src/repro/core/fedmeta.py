@@ -229,7 +229,8 @@ def make_meta_train_step(algo, optimizer, *, client_axis: str = "vmap",
 # ---- packed parameter plane pipeline ------------------------------------
 
 def init_packed_state(optimizer, plane: FlatPlane, phi, *, staleness=None,
-                      clients_per_round=None, block_dtype=None):
+                      clients_per_round=None, block_dtype=None,
+                      compression=None, num_clients=None):
     """φ pytree -> {"phi": flat plane, "opt": flat optimizer state}.
 
     With ``staleness`` set (async_engine.StalenessConfig), the state
@@ -238,10 +239,22 @@ def init_packed_state(optimizer, plane: FlatPlane, phi, *, staleness=None,
     ``(delay, k)`` original aggregation weights, zero-initialized so
     the warmup rounds aggregate fresh rows only. With ``jitter`` on, the
     ring rows additionally carry their remaining-rounds counter ``c``
-    and original drawn delay ``d`` (per-row γ^d on arrival)."""
+    and original drawn delay ``d`` (per-row γ^d on arrival).
+
+    With ``compression`` set (kernels.meta_update.CompressionConfig)
+    and error feedback on, the state carries the per-client residual
+    plane: a ``(num_clients, N)`` f32 buffer of quantization errors not
+    yet uploaded, zero-initialized (first participation compresses the
+    raw gradient). It lives in train state, so checkpoints capture it
+    and resumed runs replay bit-identically (DESIGN.md §17)."""
     from repro.optim.optimizers import make_flat_optimizer
     flat = plane.pack(phi)
     state = {"phi": flat, "opt": make_flat_optimizer(optimizer).init(flat)}
+    if compression is not None and compression.error_feedback:
+        if num_clients is None:
+            raise ValueError("error feedback needs num_clients (total "
+                             "train clients) to size the residual plane")
+        state["ef"] = jnp.zeros((num_clients, plane.n_padded), jnp.float32)
     if staleness is not None:
         if clients_per_round is None:
             raise ValueError("staleness needs clients_per_round to size "
@@ -269,6 +282,8 @@ def make_packed_meta_train_step(algo, optimizer, plane: FlatPlane, *,
                                 trim: int = 1,
                                 faults=None,
                                 guard: bool = False,
+                                compression=None,
+                                dp=None,
                                 mesh=None, mesh_axis: str | None = None,
                                 jit: bool = True, donate: bool = True):
     """Meta-train step over the packed plane: state = {phi: (N,), opt}.
@@ -325,8 +340,39 @@ def make_packed_meta_train_step(algo, optimizer, plane: FlatPlane, *,
         round is *skipped* — φ and the optimizer state pass through
         unchanged (the staleness ring still advances: arrivals
         happened) — and the round's metrics carry ``skipped=1``.
+
+    The bytes-on-the-wire plane (DESIGN.md §17) adds two more, both
+    vmap-axis only and both bitwise no-ops when off:
+
+      * ``compression`` (kernels.meta_update.CompressionConfig) encodes
+        each client row of the (m, N) block — int8 per-row-scaled or
+        top-k-sparsified — and aggregates the *encoded* uploads through
+        the fused weighted kernel (dequantization folds into the
+        weights / a scatter). With error feedback the step takes an
+        extra ``ef_idx`` input (this round's picked-client indices into
+        the state's ``(num_clients, N)`` residual plane): the residual
+        rejoins the gradient before encoding and the new residual is
+        scattered back. When the same client is picked twice in one
+        round, the LAST row's residual wins (one upload channel per
+        client per round).
+      * ``dp`` (federated.privacy.DPConfig) applies the central-DP clip
+        as aggregation-weight scaling — per-row norms are computed in
+        the codec domain (s·‖q‖ / ‖topk values‖ / ‖g‖), so clipping
+        composes with compression without decoding — and adds
+        N(0, σ²·I) with σ = z·S/m to the aggregated meta-gradient
+        (noise masked to the n_real live coordinates; the plane's
+        alignment padding stays zero). The step then takes an extra
+        per-round ``dp_key`` input (pure function of the round index —
+        see ``DPConfig.round_key``).
+
+    Composition order with both on: EF-correct → encode → clip (weight
+    scale) → fused aggregate → noise (§17).
     """
     from repro.federated.faults import apply_faults
+    from repro.federated.privacy import dp_clip_factors
+    from repro.kernels.meta_update.compress import (int8_row_norms,
+                                                    topk_encode,
+                                                    topk_row_norms)
     from repro.optim.optimizers import make_flat_optimizer
     impl = mu_ops.resolve_impl(impl)
     flat_opt = make_flat_optimizer(optimizer, impl=impl)
@@ -343,6 +389,16 @@ def make_packed_meta_train_step(algo, optimizer, plane: FlatPlane, *,
         raise ValueError("fault injection / robust aggregation need the "
                          "full (m, N) gradient block before the reduce — "
                          "client_axis='vmap' only")
+    if compression is not None or dp is not None:
+        if client_axis != "vmap":
+            raise ValueError("compression / DP need the full (m, N) "
+                             "gradient block before the reduce — "
+                             "client_axis='vmap' only")
+        if staleness is not None or faults is not None or robust:
+            raise ValueError("compression / DP compose with each other "
+                             "but not with staleness, faults, or robust "
+                             "aggregators — the codec/clip semantics of "
+                             "ring rows and corrupted rows are undefined")
 
     def aggregate(G, w_agg, *, prenorm):
         """The (m, N) → (N,) reduce. ``prenorm`` marks the staleness
@@ -376,7 +432,7 @@ def make_packed_meta_train_step(algo, optimizer, plane: FlatPlane, *,
         return new_state, metrics
 
     def step(state, support, query, weights=None, stale_sel=None,
-             fault=None):
+             fault=None, ef_idx=None, dp_key=None):
         phi = plane.unpack(state["phi"])
         m = jax.tree.leaves(support)[0].shape[0]
         w = _normalize_weights(weights, m)
@@ -468,6 +524,51 @@ def make_packed_meta_train_step(algo, optimizer, plane: FlatPlane, *,
                 "G": jnp.concatenate([buf["G"][1:], G[strag][None]], axis=0),
                 "w": jnp.concatenate([buf["w"][1:], w[strag][None]], axis=0)}
             return finish(state, meta_g, metrics, {"stale": new_stale})
+
+        if compression is not None or dp is not None:
+            # bytes-on-the-wire plane (§17): EF-correct -> encode ->
+            # clip-as-weight-scale -> fused aggregate -> noise. Taken
+            # only when a knob is on, so the default graphs below stay
+            # bitwise identical.
+            G, mets = chunk_grads(support, query)
+            metrics = _weighted_metrics(w, mets)
+            extra = None
+            w_agg = w
+            if compression is not None:
+                corrected = G.astype(jnp.float32)
+                if compression.error_feedback:
+                    corrected = corrected + state["ef"][ef_idx]
+                if compression.codec == "int8":
+                    q, scales, resid = mu_ops.int8_encode(
+                        corrected, impl=impl)
+                    if dp is not None:
+                        w_agg = w * dp_clip_factors(
+                            int8_row_norms(q, scales), dp.clip_norm)
+                    meta_g = mu_ops.int8_aggregate(
+                        q, scales, w_agg, impl=impl)
+                else:
+                    vals, idx, resid = topk_encode(
+                        corrected, compression.k_for(plane.n_real),
+                        val_dtype=bd)
+                    if dp is not None:
+                        w_agg = w * dp_clip_factors(
+                            topk_row_norms(vals), dp.clip_norm)
+                    meta_g = mu_ops.topk_aggregate(
+                        vals, idx, w_agg, plane.n_padded, impl=impl)
+                if compression.error_feedback:
+                    extra = {"ef": state["ef"].at[ef_idx].set(resid)}
+            else:
+                norms = jnp.sqrt(jnp.sum(
+                    jnp.square(G.astype(jnp.float32)), axis=1))
+                w_agg = w * dp_clip_factors(norms, dp.clip_norm)
+                meta_g = mu_ops.weighted_aggregate(G, w_agg, impl=impl)
+            if dp is not None and dp.noise_multiplier > 0:
+                live = (jnp.arange(plane.n_padded)
+                        < plane.n_real).astype(jnp.float32)
+                meta_g = meta_g + jnp.float32(dp.sigma(m)) * live * \
+                    jax.random.normal(dp_key, (plane.n_padded,),
+                                      jnp.float32)
+            return finish(state, meta_g, metrics, extra)
 
         if client_axis == "vmap" and (faults is not None or robust):
             # the failure plane needs the (m, N) block before the

@@ -40,6 +40,12 @@ class TaskBatch(NamedTuple):
     # the §4.1 "accuracy w.r.t. all data points" evaluation weights each
     # client by how many query examples it actually holds
     query_count: np.ndarray = None  # (m,) int
+    # the picked client indices behind the m rows — the error-feedback
+    # residual plane is addressed by these (DESIGN.md §17). Recorded
+    # from a draw the sampler already makes, so adding it changes no
+    # sampling stream. None when the batch wasn't drawn by picks
+    # (population-plane assembly).
+    client_idx: np.ndarray = None  # (m,) int
 
 
 @dataclasses.dataclass
@@ -151,9 +157,13 @@ class TaskStream:
 
 def stack_task_batches(tbs: Sequence[TaskBatch]) -> TaskBatch:
     """k TaskBatches -> one TaskBatch with a leading (k,) round axis on
-    every field — the stacked buffer the fused-K round mode scans over."""
-    return TaskBatch(*(np.stack([getattr(tb, f) for tb in tbs])
-                       for f in TaskBatch._fields))
+    every field — the stacked buffer the fused-K round mode scans over.
+    Optional fields that any batch leaves as None stay None."""
+    def stk(f):
+        vals = [getattr(tb, f) for tb in tbs]
+        return None if any(v is None for v in vals) else np.stack(vals)
+
+    return TaskBatch(*(stk(f) for f in TaskBatch._fields))
 
 
 def sample_task_batch(clients: list[ClientData], m: int, support_frac: float,
@@ -172,7 +182,8 @@ def sample_task_batch(clients: list[ClientData], m: int, support_frac: float,
         w.append(c.n)
     w = np.asarray(w, np.float32)
     return TaskBatch(np.stack(sx), np.stack(sy), np.stack(qx), np.stack(qy),
-                     w / w.sum(), np.asarray(qc, np.int64))
+                     w / w.sum(), np.asarray(qc, np.int64),
+                     np.asarray(picks, np.int64))
 
 
 def assemble_task_batch(shards, m: int, support_frac: float,

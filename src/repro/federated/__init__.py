@@ -5,6 +5,11 @@ from repro.federated.async_engine import (AsyncRoundEngine, PrefetchError,
 from repro.federated.comm import CommTracker
 from repro.federated.faults import FaultConfig
 from repro.federated.fedavg import FedAvgTrainer
+from repro.federated.privacy import (DPConfig, add_gaussian_noise,
+                                     clip_gradient, dp_aggregate,
+                                     dp_clip_factors, masked_uploads,
+                                     secure_sum)
+from repro.kernels.meta_update.compress import CompressionConfig
 from repro.federated.population import (CircuitBreaker, RoundPlan,
                                         UnreliabilityConfig, plan_round)
 from repro.federated.server import FederatedTrainer, evaluate_meta, evaluate_global

@@ -35,8 +35,14 @@ class CommTracker:
     rounds: int = 0
     # bytes of one client's uploaded gradient; None = same as φ (f32
     # tree upload). Set by for_state(block_dtype=...) for the packed
-    # reduced-precision block.
+    # reduced-precision block, and overridden by the trainer with the
+    # codec-true bytes (payload + scales/indices, DESIGN.md §17) when
+    # upload compression is on.
     grad_bytes: Optional[int] = None
+    # codec tag ("int8+ef", "topk0.05+ef", ...) surfaced in summaries
+    # so artifacts record WHAT the upload bytes are bytes of; None =
+    # dense upload (key omitted — pre-compression artifacts unchanged)
+    codec: Optional[str] = None
     # population plane (DESIGN.md §15): one (selected, arrived,
     # quarantined) entry per round, appended by the trainer's staging
     # under over-selection. Download bytes charge ALL selected
@@ -117,6 +123,8 @@ class CommTracker:
             # local-head vs global-head θ asymmetry explicitly
             "phi_MB": self.phi_bytes / 1e6,
         }
+        if self.codec is not None:
+            out["codec"] = self.codec
         if self.participation and rounds >= 1:
             r = min(rounds, len(self.participation)) - 1
             sel_r, arr_r, quar_r = self.participation[r]

@@ -52,6 +52,8 @@ from repro.analysis.sanitizers import assert_no_tracers, sanitizers_enabled
 from repro.federated.fedavg import FedAvgTrainer
 from repro.federated.faults import FaultConfig
 from repro.federated.population import UnreliabilityConfig
+from repro.federated.privacy import DPConfig
+from repro.kernels.meta_update.compress import CompressionConfig
 from repro.federated.server import (FederatedTrainer, evaluate_global,
                                     evaluate_meta)
 
@@ -293,6 +295,17 @@ class ExperimentPlan:
     round_deadline: Optional[float] = None
     unreliability: Optional["UnreliabilityConfig"] = None
     pool_workers: int = 0
+    # bytes-on-the-wire plane (DESIGN.md §17): upload compression +
+    # central DP for the FedMeta methods (they need the (m, N) gradient
+    # plane, like faults — pipeline="packed"/"client_plane" only; the
+    # FedAvg baselines ship dense full models by construction).
+    # ``block_dtype``/``opt_state_dtype`` are dtype NAMES ("bfloat16")
+    # so plans stay JSON-serializable: the gradient-block wire dtype
+    # and the fused-Adam m/v state dtype (None = float32 for both).
+    compression: Optional["CompressionConfig"] = None
+    dp: Optional["DPConfig"] = None
+    block_dtype: Optional[str] = None
+    opt_state_dtype: Optional[str] = None
     # FedMeta head width for local-head scenarios (DESIGN.md §13)
     local_head: Optional[int] = None
     # per-method lr/step overrides, paper-Table-4 style:
@@ -376,6 +389,17 @@ def make_trainer(plan: ExperimentPlan, method: str, loss_fn, eval_fn,
         raise ValueError("plan.faults / plan.aggregator need the packed "
                          "pipeline — set pipeline='packed' or "
                          "'client_plane'")
+    if (plan.compression is not None or plan.dp is not None
+            or plan.block_dtype) and not packed:
+        raise ValueError("plan.compression / plan.dp / plan.block_dtype "
+                         "need the packed pipeline — set pipeline="
+                         "'packed' or 'client_plane'")
+    import jax.numpy as jnp
+    opt_kw = {}
+    if plan.opt_state_dtype:
+        # quantized optimizer state (§17): fused Adam keeps m/v in this
+        # dtype and dequantizes inside the kernel (the olmax trick)
+        opt_kw["state_dtype"] = jnp.dtype(plan.opt_state_dtype)
     pop = {}
     if (plan.unreliability is not None or plan.over_select
             or plan.round_deadline is not None or plan.pool_workers):
@@ -389,10 +413,14 @@ def make_trainer(plan: ExperimentPlan, method: str, loss_fn, eval_fn,
                    round_deadline=plan.round_deadline,
                    pool_workers=plan.pool_workers)
     return FederatedTrainer(
-        algo, adam(over.get("outer_lr", plan.outer_lr)), train_clients,
+        algo, adam(over.get("outer_lr", plan.outer_lr), **opt_kw),
+        train_clients,
         client_axis="chunked" if plan.client_chunk else "vmap",
         client_chunk=plan.client_chunk, packed=packed,
         client_plane=(plan.pipeline == "client_plane"),
+        block_dtype=(jnp.dtype(plan.block_dtype)
+                     if plan.block_dtype else None),
+        compression=plan.compression, dp=plan.dp,
         fuse_rounds=plan.fuse_rounds if packed else 1,
         aggregator=plan.aggregator, screen_factor=plan.screen_factor,
         trim=plan.trim, faults=plan.faults, **pop, **common)

@@ -23,10 +23,60 @@ before upload:
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
 from repro.utils.pytree import tree_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class DPConfig:
+    """Central-DP knob for the packed pipeline (DESIGN.md §17).
+
+    The fused aggregation applies the clip as a weight scale (clipping
+    row u by c is identical to scaling its aggregation weight by c —
+    the same identity the norm-screening aggregator uses), then adds
+    N(0, σ²) to the aggregated meta-gradient with
+    σ = noise_multiplier · clip_norm / m — exactly `dp_aggregate`'s
+    accounting, pinned against it in tests. Noise keys derive from
+    ``fold_in(PRNGKey(seed), round)`` — a pure function of the round
+    index, so prefetched, fused and resumed runs replay identically
+    with nothing extra in the checkpoint.
+
+    Note on weighting: σ = z·S/m is the uniform-mean (weights = 1/m)
+    Gaussian-mechanism accounting; with data-count weights the
+    worst-case per-client sensitivity is max_u w_u·S. Runs targeting a
+    formal ε should set ``weighted=False`` on the trainer.
+    """
+    clip_norm: float = 1.0
+    noise_multiplier: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.clip_norm <= 0:
+            raise ValueError(f"clip_norm must be > 0, got {self.clip_norm}")
+        if self.noise_multiplier < 0:
+            raise ValueError("noise_multiplier must be >= 0, got "
+                             f"{self.noise_multiplier}")
+
+    def sigma(self, num_clients: int) -> float:
+        """σ_effective of the noise added to the aggregated mean."""
+        return self.noise_multiplier * self.clip_norm / num_clients
+
+    def round_key(self, round_: int):
+        """The round's noise key (pure function of the round index)."""
+        return jax.random.fold_in(jax.random.PRNGKey(self.seed), round_)
+
+
+def dp_clip_factors(row_norms, clip_norm: float):
+    """(m,) per-row L2 norms -> (m,) clip factors min(1, S/‖g_u‖).
+
+    Scaling aggregation weights by these factors IS the per-client clip
+    (`clip_gradient`'s epsilon guard kept identical), so the clipped
+    aggregate runs through the unmodified fused weighted kernel."""
+    return jnp.minimum(1.0, clip_norm / (row_norms + 1e-12))
 
 
 def clip_gradient(g, clip_norm: float):

@@ -23,6 +23,8 @@ from repro.federated.async_engine import (AsyncRoundEngine, StalenessConfig,
                                           WorkerPool)
 from repro.federated.comm import CommTracker, measure_client_flops
 from repro.federated.faults import FaultConfig
+from repro.federated.privacy import DPConfig
+from repro.kernels.meta_update.compress import CompressionConfig
 from repro.federated.population import (CircuitBreaker, UnreliabilityConfig,
                                         plan_round)
 from repro.kernels.meta_update import ops as mu_ops
@@ -153,6 +155,9 @@ class FederatedTrainer:
     faults: Optional[FaultConfig] = None  # packed + vmap axis only
     guard: Optional[bool] = None  # non-finite skip-round guard; None =
                                   # auto (on iff faults or robust agg)
+    # ---- bytes-on-the-wire plane (DESIGN.md §17) --------------------
+    compression: Optional[CompressionConfig] = None  # packed + vmap only
+    dp: Optional[DPConfig] = None  # central-DP clip+noise (packed + vmap)
     prefetch_retries: int = 0   # transient staging failures retried
     checkpoint_every: int = 0   # rounds between checkpoints (0 = off)
     checkpoint_dir: Optional[str] = None
@@ -218,6 +223,22 @@ class FederatedTrainer:
             raise ValueError(f"trimmed mean needs 2·trim < clients_per_"
                              f"round ({self.trim} vs "
                              f"{self.clients_per_round})")
+        if self.compression is not None or self.dp is not None:
+            if not self.packed or self.client_axis != "vmap":
+                raise ValueError("compression / DP need the full (m, N) "
+                                 "client block — packed=True and "
+                                 "client_axis='vmap'")
+            if (self.staleness is not None or self.faults is not None
+                    or self.aggregator != "mean"
+                    or self._population_active):
+                raise ValueError("compression / DP compose with each "
+                                 "other but not with staleness, faults, "
+                                 "robust aggregators, or the population "
+                                 "plane")
+            if self.fuse_rounds > 1:
+                raise ValueError("compression / DP and fuse_rounds>1 are "
+                                 "mutually exclusive (EF indices and "
+                                 "noise keys are per-round inputs)")
         if self.guard is None:
             # auto: any failure-plane knob needs skip-round semantics
             self.guard = (self.faults is not None or
@@ -268,6 +289,7 @@ class FederatedTrainer:
                       aggregator=self.aggregator,
                       screen_factor=self.screen_factor, trim=self.trim,
                       faults=self.faults, guard=bool(self.guard),
+                      compression=self.compression, dp=self.dp,
                       mesh=self.mesh, mesh_axis=self.mesh_axis)
             self._step = make_packed_meta_train_step(
                 self.algo, self.optimizer, self._plane, **kw)
@@ -289,12 +311,24 @@ class FederatedTrainer:
             state = init_packed_state(
                 self.optimizer, self._plane, phi, staleness=self.staleness,
                 clients_per_round=self.clients_per_round,
-                block_dtype=self.block_dtype)
+                block_dtype=self.block_dtype,
+                compression=self.compression,
+                num_clients=len(self.train_clients))
         else:
             state = {"phi": phi, "opt": self.optimizer.init(phi)}
         self.comm = CommTracker.for_state(
             phi, self.clients_per_round,
             block_dtype=self.block_dtype if self.packed else None)
+        if self.packed and self.compression is not None:
+            # codec-true upload bytes (§17): payload + side information
+            # over the REAL parameter count; top-k values ride at the
+            # block dtype's width. Download stays dense φ.
+            from repro.utils.pytree import tree_size
+            val_itemsize = jnp.dtype(
+                self.block_dtype or jnp.float32).itemsize
+            self.comm.grad_bytes = self.compression.upload_bytes(
+                tree_size(phi), val_itemsize)
+            self.comm.codec = self.compression.label()
         return state
 
     def phi_tree(self, state):
@@ -323,9 +357,15 @@ class FederatedTrainer:
             self.comm.flops_per_client = fl
         return fl
 
-    def _stage_block(self, stream, dp, k):
+    def _stage_block(self, stream, dp, k, round_):
         """Host half of one round block: sample + device_put staging.
-        Runs on the prefetch thread (in block order) when pipelined."""
+        Runs on the prefetch thread (in block order) when pipelined.
+
+        The step's optional inputs are positional —
+        ``(stale_sel, fault, ef_idx, dp_key)`` — staged as a tail with
+        trailing ``None``s trimmed, so every off-knob configuration
+        stages byte-for-byte the argument tuple it staged before the
+        knob existed (the PR 4–7 shipping invariant)."""
         if k > 1:   # fused-K: one stacked (k, m, ...) staged buffer
             tb = stack_task_batches(stream.take(k))
             return ((dp(tb.support_x), dp(tb.support_y)),
@@ -335,19 +375,31 @@ class FederatedTrainer:
         args = ((dp(tb.support_x), dp(tb.support_y)),
                 (dp(tb.query_x), dp(tb.query_y)),
                 dp(tb.weight) if self.weighted else None)
+        sel = None
         if self.staleness is not None:
             # (straggler_idx, fresh_idx[, delays]) — delays only
             # with jitter on, so the off-path stays bit-identical
-            sel = self.staleness.pick(
-                self.clients_per_round, self._stale_rng)
-            args += (tuple(dp(s) for s in sel),)
-        elif self.faults is not None:
-            args += (None,)   # stale_sel placeholder (positional call)
+            sel = tuple(dp(s) for s in self.staleness.pick(
+                self.clients_per_round, self._stale_rng))
+        fault = None
         if self.faults is not None:
-            fault = self.faults.pick(
-                self.clients_per_round, self._fault_rng)
-            args += (tuple(dp(f) for f in fault),)
-        return args
+            fault = tuple(dp(f) for f in self.faults.pick(
+                self.clients_per_round, self._fault_rng))
+        ef_idx = None
+        if self.compression is not None and \
+                self.compression.error_feedback:
+            # this round's picks = the residual-plane rows the step
+            # gathers/scatters (recorded by the sampler; no extra draw)
+            ef_idx = dp(np.asarray(tb.client_idx, np.int32))
+        dp_key = None
+        if self.dp is not None and self.dp.noise_multiplier > 0:
+            # pure function of the round index: prefetch/resume-safe
+            # with nothing checkpointed
+            dp_key = self.dp.round_key(round_)
+        tail = [sel, fault, ef_idx, dp_key]
+        while tail and tail[-1] is None:
+            tail.pop()
+        return args + tuple(tail)
 
     # ---- population plane (DESIGN.md §15) ---------------------------
     def _peek_picks(self):
@@ -533,7 +585,8 @@ class FederatedTrainer:
                         self._pool.map(
                             sorted({int(p) for p in self._peek_picks()}),
                             label=f"round {produced['r'] + 1} warm")
-                    args = self._stage_block(stream, dp, k)
+                    args = self._stage_block(stream, dp, k,
+                                             produced["r"] + 1)
             except BaseException:
                 self._restore_rngs(entry)
                 raise

@@ -1,0 +1,268 @@
+"""Compression codecs for the packed (m, N) client-gradient block
+(DESIGN.md §17): the bytes-on-the-wire plane.
+
+The paper's headline is communication cost; beyond the bf16 block
+(`block_dtype`), two classic codecs shrink the *upload* leg further,
+both operating on the same (m, N) block the fused aggregation kernel
+already consumes, so encode → aggregate stays single fused passes over
+flat memory:
+
+  * **int8 per-row-scaled quantization** — each client row is scaled by
+    ``s_u = max|g_u| / 127`` and rounded to int8. The wire format is
+    ``N`` int8 payload + one f32 scale per client. Dequantization
+    *fuses into the existing weighted-aggregate kernel*: the kernel
+    casts each row to f32 and multiplies by its scalar weight, so
+    feeding it the int8 block with combined weights ``w_u · s_u``
+    computes Σ w_u·s_u·q_u = Σ w_u·ĝ_u in the same single sweep — no
+    dequantized (m, N) f32 block ever materializes.
+  * **top-k sparsification** — each row transmits its k
+    largest-magnitude coordinates as (index, value) pairs; values may
+    additionally be cast to the block dtype. The selection runs as one
+    XLA ``lax.top_k`` over |G| (a per-row sort network is out of scope
+    for the pallas plane — documented, not hidden); the
+    dequantize-and-aggregate half scatters the pairs back to a dense
+    block and reuses the fused weighted-aggregate kernel.
+
+Both codecs are lossy, so the round's quantization error must not be
+*lost*: with **error feedback** (Seide et al.; Karimireddy et al.) each
+train client carries a residual e_u in server-side client state, the
+encoder compresses g_u + e_u, and the new residual
+e_u' = (g_u + e_u) − decode(encode(g_u + e_u)) is carried to that
+client's next participating round. Residuals telescope: the sum of
+dequantized uploads plus the final residual equals the sum of true
+(corrected) gradients — pinned in tests/test_compression.py. The int8
+encode kernel therefore emits the quantized block AND the residual
+block in one pass.
+
+Every kernel has a pure-jnp oracle beside it (`*_ref`), following the
+aggregate.py idiom; the package-level `pallas-missing-ref` contract is
+carried by meta_update/ref.py + ops.py as before.
+
+TPU note: int8 native tiling is (32, 128) sublanes × lanes; the plane's
+ALIGN guarantees 8-row multiples only, so on real TPUs the int8 block
+may be relayed out — the interpret path (CPU CI) and the byte
+accounting are unaffected, and the padded N is itself 1024-aligned.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.meta_update.aggregate import (_SLAB_BUDGET_ELEMS,
+                                                 weighted_aggregate_flat)
+from repro.kernels.meta_update.fused import LANE, SUBLANE, choose_block_rows
+
+CODECS = ("int8", "topk")
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    """Upload-compression spec for the packed pipeline.
+
+    codec           "int8" (per-row-scaled 8-bit) or "topk" (magnitude
+                    sparsification).
+    topk_frac       fraction of the REAL (unpadded) parameter count each
+                    client transmits under "topk" (k = max(1, round(
+                    topk_frac · n_real))).
+    error_feedback  carry per-client residuals in train state (on by
+                    default — both codecs are biased without it).
+
+    Frozen and asdict-serializable, so a plan's artifact records its
+    exact codec (the FaultConfig pattern).
+    """
+    codec: str = "int8"
+    topk_frac: float = 0.05
+    error_feedback: bool = True
+
+    def __post_init__(self):
+        if self.codec not in CODECS:
+            raise ValueError(f"unknown codec {self.codec!r}; expected one "
+                             f"of {CODECS}")
+        if not (0.0 < self.topk_frac <= 1.0):
+            raise ValueError(f"topk_frac must be in (0, 1], got "
+                             f"{self.topk_frac}")
+
+    def label(self) -> str:
+        """Short codec tag for comm summaries/artifacts ("int8+ef",
+        "topk0.05", ...)."""
+        base = ("int8" if self.codec == "int8"
+                else f"topk{self.topk_frac:g}")
+        return base + ("+ef" if self.error_feedback else "")
+
+    def k_for(self, n_real: int) -> int:
+        """Per-client transmitted coordinate count under "topk"."""
+        return max(1, int(round(self.topk_frac * n_real)))
+
+    def upload_bytes(self, n_real: int, val_itemsize: int = 4) -> int:
+        """True transmitted bytes for ONE client's upload (§17 rules):
+        payload + side information, over the REAL parameter count (the
+        plane's alignment padding is a server-side artifact — zeros are
+        never put on the wire).
+
+          int8: n_real × 1 B payload + 4 B (one f32 row scale)
+          topk: k × (4 B int32 index + val_itemsize B value)
+
+        ``val_itemsize`` is the top-k value dtype's width — the block
+        dtype when the pipeline runs a reduced-precision block.
+        """
+        if self.codec == "int8":
+            return n_real + 4
+        return self.k_for(n_real) * (4 + int(val_itemsize))
+
+
+# ---- int8 per-row-scaled quantization -----------------------------------
+
+def int8_scales(G) -> jnp.ndarray:
+    """(m, N) block -> (m,) f32 per-row scales max|g_u| / 127 (one XLA
+    row reduce; an all-zero row gets scale 0 and quantizes to zeros)."""
+    return jnp.max(jnp.abs(G.astype(jnp.float32)), axis=1) / 127.0
+
+
+def _int8_encode_kernel(s_ref, g_ref, q_ref, r_ref):
+    """One (m, rows, 128) slab: quantize every client row against its
+    SMEM scalar scale and emit the residual g − s·q in the same pass —
+    the error-feedback state never needs a separate decode sweep."""
+    m = g_ref.shape[0]
+
+    def body(u, _):
+        g = g_ref[u, :, :].astype(jnp.float32)
+        s = s_ref[u]
+        inv = jnp.where(s > 0, 1.0 / jnp.maximum(s, 1e-30), 0.0)
+        q = jnp.clip(jnp.round(g * inv), -127.0, 127.0)
+        q_ref[u, :, :] = q.astype(jnp.int8)
+        r_ref[u, :, :] = g - s * q
+        return 0
+
+    jax.lax.fori_loop(0, m, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def int8_encode_flat(G, *, interpret: bool = False):
+    """(m, N) f32 block -> (q int8, scales f32 (m,), resid f32) in one
+    fused pass per slab (quantize + residual)."""
+    m, N = G.shape
+    assert N % (SUBLANE * LANE) == 0, N
+    scales = int8_scales(G)
+    total_rows = N // LANE
+    # slab + two same-shape outputs resident in VMEM -> third the budget
+    max_rows = max(SUBLANE, _SLAB_BUDGET_ELEMS // (LANE * max(3 * m, 1)))
+    rows = choose_block_rows(total_rows, max_rows=max_rows)
+    n_tiles = total_rows // rows
+
+    q, resid = pl.pallas_call(
+        _int8_encode_kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((m, rows, LANE), lambda i: (0, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((m, rows, LANE), lambda i: (0, i, 0)),
+            pl.BlockSpec((m, rows, LANE), lambda i: (0, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, total_rows, LANE), jnp.int8),
+            jax.ShapeDtypeStruct((m, total_rows, LANE), jnp.float32),
+        ],
+        interpret=interpret,
+    )(scales, G.astype(jnp.float32).reshape(m, total_rows, LANE))
+    return q.reshape(m, N), scales, resid.reshape(m, N)
+
+
+def int8_encode_ref(G):
+    """Pure-jnp oracle of ``int8_encode_flat`` (identical arithmetic:
+    scale, reciprocal, round-half-even, clip, residual)."""
+    g = G.astype(jnp.float32)
+    scales = int8_scales(g)
+    inv = jnp.where(scales > 0, 1.0 / jnp.maximum(scales, 1e-30), 0.0)
+    q = jnp.clip(jnp.round(g * inv[:, None]), -127.0, 127.0)
+    resid = g - scales[:, None] * q
+    return q.astype(jnp.int8), scales, resid
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def int8_aggregate_flat(q, scales, w, *, interpret: bool = False):
+    """Dequantize-and-aggregate, fused: Σ_u w_u·s_u·q_u through the
+    existing weighted-aggregate kernel. The kernel casts each int8 row
+    to f32 and multiplies by its SMEM scalar weight, so folding the
+    dequantization scale into the weight makes dequant + reduce ONE
+    sweep over the int8 block — 4× less memory traffic than aggregating
+    a dequantized f32 block."""
+    return weighted_aggregate_flat(
+        q, w.astype(jnp.float32) * scales, interpret=interpret)
+
+
+def int8_aggregate_ref(q, scales, w):
+    """Oracle: (w ∘ s) @ q in f32. (`weighted_aggregate_ref` casts the
+    weights to the BLOCK dtype — int8 here — so the codec needs its own
+    oracle with the combined weights kept in f32.)"""
+    return jax.lax.dot_general(
+        w.astype(jnp.float32) * scales, q.astype(jnp.float32),
+        (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+def int8_row_norms(q, scales) -> jnp.ndarray:
+    """L2 norm of each DECODED row: s_u·‖q_u‖ — a per-row reduce over
+    the int8 block (no dequantized block), exact for the decoded values
+    the server actually aggregates. Feeds the DP clip (§17: clip is
+    computed in the codec domain, after decode)."""
+    sq = jnp.sum(jnp.square(q.astype(jnp.float32)), axis=1)
+    return scales * jnp.sqrt(sq)
+
+
+# ---- top-k sparsification -----------------------------------------------
+
+def topk_encode(G, k: int, val_dtype=jnp.float32):
+    """(m, N) block -> ((m, k) values, (m, k) int32 indices, (m, N) f32
+    residual). Selection is per-row magnitude top-k via ``lax.top_k``
+    (ties broken toward the lower index, deterministically). Values are
+    cast to ``val_dtype`` BEFORE the residual is computed, so the
+    residual absorbs the cast error too — error feedback sees exactly
+    what the wire carries."""
+    g = G.astype(jnp.float32)
+    m = g.shape[0]
+    _, idx = jax.lax.top_k(jnp.abs(g), k)
+    idx = idx.astype(jnp.int32)
+    vals = jnp.take_along_axis(g, idx, axis=1).astype(val_dtype)
+    rows = jnp.arange(m, dtype=jnp.int32)[:, None]
+    resid = g.at[rows, idx].add(-vals.astype(jnp.float32))
+    return vals, idx, resid
+
+
+def topk_densify(vals, idx, n: int):
+    """Scatter (m, k) pairs back to the dense (m, n) f32 block the
+    fused aggregation kernel consumes (decode half of the codec)."""
+    m = vals.shape[0]
+    rows = jnp.arange(m, dtype=jnp.int32)[:, None]
+    dense = jnp.zeros((m, n), jnp.float32)
+    return dense.at[rows, idx].add(vals.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("n", "interpret"))
+def topk_aggregate_flat(vals, idx, w, n: int, *, interpret: bool = False):
+    """Decode-and-aggregate: scatter to dense (one XLA scatter), then
+    the fused weighted-aggregate kernel reduces (m, n) -> (n,)."""
+    return weighted_aggregate_flat(topk_densify(vals, idx, n), w,
+                                   interpret=interpret)
+
+
+def topk_aggregate_ref(vals, idx, w, n: int):
+    """Oracle: direct weighted scatter-add into the (n,) output —
+    never materializes the dense block, so kernel-vs-oracle parity
+    also cross-checks the densify step."""
+    m, k = vals.shape
+    wv = (w.astype(jnp.float32)[:, None] * vals.astype(jnp.float32))
+    return jnp.zeros((n,), jnp.float32).at[idx.reshape(-1)].add(
+        wv.reshape(-1))
+
+
+def topk_row_norms(vals) -> jnp.ndarray:
+    """L2 norm of each decoded row = ‖transmitted values‖ (all other
+    coordinates decode to zero) — the DP clip's per-row reduction in
+    the codec domain."""
+    return jnp.sqrt(jnp.sum(jnp.square(vals.astype(jnp.float32)), axis=1))

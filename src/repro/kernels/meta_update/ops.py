@@ -18,6 +18,14 @@ import os
 import jax.numpy as jnp
 
 from repro.kernels.meta_update import ref
+from repro.kernels.meta_update.compress import (CODECS,  # noqa: F401
+                                                CompressionConfig,
+                                                int8_aggregate_flat,
+                                                int8_aggregate_ref,
+                                                int8_encode_flat,
+                                                int8_encode_ref,
+                                                topk_aggregate_flat,
+                                                topk_aggregate_ref)
 from repro.kernels.meta_update.aggregate import (masked_mean_flat,
                                                  masked_mean_ref,
                                                  row_liveness,
@@ -102,6 +110,40 @@ def weighted_aggregate(gs, w, *, impl: str | None = None):
         return weighted_aggregate_ref(gs, w)
     return weighted_aggregate_flat(gs, w,
                                    interpret=(impl == "pallas_interpret"))
+
+
+def int8_encode(G, *, impl: str | None = None):
+    """(m, N) block -> (q int8, (m,) f32 scales, (m, N) f32 residual).
+
+    Per-row-scaled int8 quantization with the error-feedback residual
+    emitted in the same pass (compress.py). "xla" runs the pure-jnp
+    oracle; the pallas paths run the fused encode kernel."""
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        return int8_encode_ref(G)
+    return int8_encode_flat(G, interpret=(impl == "pallas_interpret"))
+
+
+def int8_aggregate(q, scales, w, *, impl: str | None = None):
+    """Dequantize-and-aggregate Σ_u w_u·s_u·q_u -> (N,) f32, fused into
+    the weighted-aggregate kernel (the scale folds into the weight)."""
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        return int8_aggregate_ref(q, scales, w)
+    return int8_aggregate_flat(q, scales, w,
+                               interpret=(impl == "pallas_interpret"))
+
+
+def topk_aggregate(vals, idx, w, n: int, *, impl: str | None = None):
+    """Decode-and-aggregate (m, k) top-k uploads -> (n,) f32 weighted
+    sum. (Encoding is ``compress.topk_encode`` on every impl: per-row
+    selection is one XLA ``lax.top_k`` — a pallas sort network is out
+    of scope, documented in compress.py.)"""
+    impl = resolve_impl(impl)
+    if impl == "xla":
+        return topk_aggregate_ref(vals, idx, w, n)
+    return topk_aggregate_flat(vals, idx, w, n,
+                               interpret=(impl == "pallas_interpret"))
 
 
 AGGREGATORS = ("mean", "masked_mean", "screen", "trimmed")

@@ -243,10 +243,10 @@ def test_trainer_retry_is_deterministic(monkeypatch):
     orig = FederatedTrainer._stage_block
     fails = {"left": 1}
 
-    def flaky(self, stream, dp, k):
-        args = orig(self, stream, dp, k)   # consume draws, THEN fail:
-        if fails["left"]:                  # the restore path must undo
-            fails["left"] -= 1             # the stream advance
+    def flaky(self, stream, dp, k, round_):
+        args = orig(self, stream, dp, k, round_)  # consume draws, THEN
+        if fails["left"]:                  # fail: the restore path must
+            fails["left"] -= 1             # undo the stream advance
             raise OSError("transient staging failure")
         return args
 

@@ -1,0 +1,408 @@
+"""Bytes-on-the-wire plane (DESIGN.md §17).
+
+Contracts: (1) every compression kernel matches its pure-jnp oracle —
+int8 quantization bitwise on the payload, top-k exactly; (2) the int8
+round-trip error obeys the half-step bound s/2 per coordinate; (3)
+error-feedback residuals telescope — the sum of dequantized uploads
+plus the final residual equals the sum of the true (corrected)
+gradients, so no gradient mass is ever lost to quantization; (4) with
+every knob off the trainer histories are bit-identical across all four
+FedMeta algorithms and FedAvg (pipelined == sync through the new
+staging tail); (5) checkpoint resume replays EF state bit-identically;
+(6) the fused DP path pins against `privacy.dp_aggregate`'s clipping
+and its σ_effective = z·S/m accounting (hand-checked by output
+variance); (7) bf16 optimizer state tracks f32 within a pinned
+tolerance; (8) the CommTracker reports codec-true upload bytes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import classification_loss, make_algorithm
+from repro.core.fedmeta import init_packed_state, make_packed_meta_train_step
+from repro.federated import (CompressionConfig, DPConfig, dp_aggregate,
+                             dp_clip_factors)
+from repro.federated.async_engine import StalenessConfig
+from repro.federated.faults import FaultConfig
+from repro.federated.fedavg import FedAvgTrainer
+from repro.federated.server import FederatedTrainer
+from repro.kernels.meta_update import ops as mu_ops
+from repro.kernels.meta_update.compress import (int8_aggregate_ref,
+                                                int8_encode_ref,
+                                                int8_row_norms, int8_scales,
+                                                topk_aggregate_ref,
+                                                topk_densify, topk_encode,
+                                                topk_row_norms)
+from repro.optim import adam
+from repro.utils.flat import plane_for
+from tests.test_async_engine import (ALGOS, EVAL, LOSS_FN, EVAL_FN, TRAIN,
+                                     _TinyModel, _fedmeta_history,
+                                     _no_prefetch_threads)
+
+IMPLS = ("xla", "pallas_interpret")
+
+
+def _block(m=5, n=4096, seed=0, zero_row=None):
+    rng = np.random.RandomState(seed)
+    G = rng.normal(0, 1, (m, n)).astype(np.float32)
+    if zero_row is not None:
+        G[zero_row] = 0.0
+    return jnp.asarray(G)
+
+
+def _weights(m=5, seed=1):
+    rng = np.random.RandomState(seed)
+    w = rng.uniform(0.1, 1.0, m).astype(np.float32)
+    return jnp.asarray(w / w.sum())
+
+
+# ---- int8 codec: kernel vs oracle ---------------------------------------
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_int8_encode_matches_oracle(impl):
+    """Payload bitwise-identical to the oracle; scales/residual to f32
+    reduction-order tolerance (the scale is one jnp.max row reduce —
+    jit vs eager may differ in the last ulp)."""
+    G = _block(zero_row=2)                 # an all-zero row must be safe
+    q_r, s_r, r_r = int8_encode_ref(G)
+    q_k, s_k, r_k = mu_ops.int8_encode(G, impl=impl)
+    np.testing.assert_array_equal(np.asarray(q_k), np.asarray(q_r))
+    assert q_k.dtype == jnp.int8
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(r_k), np.asarray(r_r), atol=1e-6)
+    # zero row: scale 0, zero payload, zero residual (no NaN from 1/s)
+    assert float(s_r[2]) == 0.0
+    assert not np.any(np.asarray(q_r[2]))
+    assert not np.any(np.asarray(r_r[2]))
+    assert np.all(np.isfinite(np.asarray(r_k)))
+
+
+def test_int8_roundtrip_error_bound():
+    """|s·q − g| ≤ s/2 per coordinate (round-to-nearest of g/s), and the
+    residual IS that round-trip error."""
+    G = _block()
+    q, s, resid = int8_encode_ref(G)
+    deq = s[:, None] * q.astype(jnp.float32)
+    bound = np.broadcast_to(np.asarray(s)[:, None] / 2 + 1e-6, G.shape)
+    np.testing.assert_array_less(np.abs(np.asarray(deq - G)), bound)
+    np.testing.assert_allclose(np.asarray(resid), np.asarray(G - deq),
+                               atol=1e-7)
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_int8_aggregate_matches_oracle(impl):
+    """Fused dequantize-and-aggregate == oracle == the dense math
+    Σ w_u·s_u·q_u computed on a materialized f32 block."""
+    G, w = _block(), _weights()
+    q, s, _ = int8_encode_ref(G)
+    out = mu_ops.int8_aggregate(q, s, w, impl=impl)
+    ref = int8_aggregate_ref(q, s, w)
+    dense = jnp.einsum("u,un->n", w, s[:, None] * q.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(dense),
+                               atol=1e-6)
+
+
+def test_int8_row_norms_match_decoded():
+    G = _block(zero_row=1)
+    q, s, _ = int8_encode_ref(G)
+    deq = s[:, None] * q.astype(jnp.float32)
+    want = jnp.sqrt(jnp.sum(deq * deq, axis=1))
+    np.testing.assert_allclose(np.asarray(int8_row_norms(q, s)),
+                               np.asarray(want), rtol=1e-5)
+
+
+# ---- top-k codec ---------------------------------------------------------
+
+def test_topk_encode_exact():
+    """The selected coordinates are exactly the k largest magnitudes,
+    values are carried exactly (f32), and densify + residual
+    reconstructs G bit-cleanly."""
+    G = _block(m=3, n=2048)
+    k = 100
+    vals, idx, resid = topk_encode(G, k)
+    assert vals.shape == (3, k) and idx.dtype == jnp.int32
+    for u in range(3):
+        g = np.asarray(G[u])
+        got = set(np.asarray(idx[u]).tolist())
+        # |g| threshold at the k-th largest magnitude: everything
+        # strictly above it must be selected
+        kth = np.sort(np.abs(g))[-k]
+        assert {i for i in range(len(g)) if abs(g[i]) > kth} <= got
+        np.testing.assert_array_equal(np.asarray(vals[u]),
+                                      g[np.asarray(idx[u])])
+    dense = topk_densify(vals, idx, G.shape[1])
+    np.testing.assert_allclose(np.asarray(dense + resid), np.asarray(G),
+                               atol=1e-6)
+
+
+def test_topk_cast_error_lands_in_residual():
+    """With bf16 wire values the residual absorbs the cast error too:
+    densify(decode) + residual still equals G exactly (error feedback
+    sees exactly what the wire carries)."""
+    G = _block(m=2, n=1024)
+    vals, idx, resid = topk_encode(G, 64, val_dtype=jnp.bfloat16)
+    assert vals.dtype == jnp.bfloat16
+    dense = topk_densify(vals, idx, G.shape[1])
+    np.testing.assert_allclose(np.asarray(dense + resid), np.asarray(G),
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_topk_aggregate_matches_oracle(impl):
+    G, w = _block(), _weights()
+    vals, idx, _ = topk_encode(G, 128)
+    n = G.shape[1]
+    out = mu_ops.topk_aggregate(vals, idx, w, n, impl=impl)
+    ref = topk_aggregate_ref(vals, idx, w, n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(topk_row_norms(vals)),
+        np.asarray(jnp.sqrt(jnp.sum(topk_densify(vals, idx, n) ** 2,
+                                    axis=1))), rtol=1e-5)
+
+
+# ---- error feedback telescopes ------------------------------------------
+
+@pytest.mark.parametrize("codec", ["int8", "topk"])
+def test_error_feedback_telescopes(codec):
+    """Over T rounds of one client: Σ_t decode(encode(g_t + e_t)) + e_T
+    == Σ_t g_t — quantization error is deferred, never lost."""
+    rng = np.random.RandomState(7)
+    n, T = 1024, 8
+    e = jnp.zeros((1, n), jnp.float32)
+    sum_g = np.zeros(n, np.float64)
+    sum_dec = np.zeros(n, np.float64)
+    for t in range(T):
+        g = jnp.asarray(rng.normal(0, 1, (1, n)), jnp.float32)
+        sum_g += np.asarray(g[0], np.float64)
+        corrected = g + e
+        if codec == "int8":
+            q, s, e = int8_encode_ref(corrected)
+            dec = s[:, None] * q.astype(jnp.float32)
+        else:
+            vals, idx, e = topk_encode(corrected, 64)
+            dec = topk_densify(vals, idx, n)
+        sum_dec += np.asarray(dec[0], np.float64)
+    np.testing.assert_allclose(sum_dec + np.asarray(e[0], np.float64),
+                               sum_g, atol=1e-4)
+
+
+# ---- config surface ------------------------------------------------------
+
+def test_compression_config_surface():
+    assert CompressionConfig("int8").label() == "int8+ef"
+    assert CompressionConfig("int8", error_feedback=False).label() == "int8"
+    assert CompressionConfig("topk", topk_frac=0.05).label() == "topk0.05+ef"
+    assert CompressionConfig("topk", topk_frac=0.1).k_for(1000) == 100
+    assert CompressionConfig("topk", topk_frac=1e-9).k_for(10) == 1
+    # §17 wire-format bytes: payload + side information over n_real
+    assert CompressionConfig("int8").upload_bytes(1000) == 1004
+    assert CompressionConfig("topk", topk_frac=0.05).upload_bytes(
+        1000) == 50 * 8
+    assert CompressionConfig("topk", topk_frac=0.05).upload_bytes(
+        1000, val_itemsize=2) == 50 * 6
+    with pytest.raises(ValueError, match="unknown codec"):
+        CompressionConfig("gzip")
+    with pytest.raises(ValueError, match="topk_frac"):
+        CompressionConfig("topk", topk_frac=0.0)
+    with pytest.raises(ValueError, match="clip_norm"):
+        DPConfig(clip_norm=0.0)
+    with pytest.raises(ValueError, match="noise_multiplier"):
+        DPConfig(noise_multiplier=-1.0)
+
+
+def test_trainer_knob_validation():
+    algo = make_algorithm("fomaml", LOSS_FN, EVAL_FN, inner_lr=0.05)
+    kw = dict(train_clients=TRAIN, clients_per_round=4, support_frac=0.5,
+              support_size=8, query_size=8, seed=0)
+    with pytest.raises(ValueError, match="packed"):
+        FederatedTrainer(algo, adam(1e-3), packed=False,
+                         compression=CompressionConfig("int8"), **kw)
+    with pytest.raises(ValueError, match="packed"):
+        FederatedTrainer(algo, adam(1e-3), packed=False,
+                         dp=DPConfig(), **kw)
+    for clash in (dict(staleness=StalenessConfig(delay=1, fraction=0.34,
+                                                 discount=0.5)),
+                  dict(faults=FaultConfig(dropout=0.25, seed=1)),
+                  dict(aggregator="trimmed", trim=1),
+                  dict(fuse_rounds=2)):
+        with pytest.raises(ValueError):
+            FederatedTrainer(algo, adam(1e-3), packed=True,
+                             compression=CompressionConfig("int8"),
+                             **clash, **kw)
+
+
+# ---- off-knob bitwise identity ------------------------------------------
+
+@pytest.mark.parametrize("algo_name", ALGOS)
+def test_compression_off_bitwise_identity(algo_name):
+    """With compression/dp absent the new staging tail stays empty:
+    pipelined == sync bit-for-bit, and passing the knobs explicitly as
+    None changes nothing (no default-argument drift)."""
+    sync = _fedmeta_history(algo_name, packed=True)
+    off = _fedmeta_history(algo_name, packed=True, compression=None,
+                           dp=None, prefetch_depth=2, flush_every=4)
+    assert off == sync
+    assert _no_prefetch_threads()
+
+
+def test_fedavg_unaffected_bitwise():
+    def run(**kw):
+        tr = FedAvgTrainer(LOSS_FN, EVAL_FN, local_lr=1e-2, local_steps=2,
+                           train_clients=TRAIN, clients_per_round=4,
+                           support_frac=0.5, support_size=8, query_size=8,
+                           seed=0, **kw)
+        state = tr.init(jax.random.PRNGKey(0), _TinyModel.init)
+        tr.run(state, 6, eval_every=3, eval_clients=EVAL)
+        return tr.history
+
+    assert run(prefetch_depth=2, flush_every=3) == run()
+
+
+# ---- compressed training end-to-end -------------------------------------
+
+@pytest.mark.parametrize("codec", ["int8", "topk"])
+def test_compressed_run_pipelined_bit_identical(codec):
+    """Compression (+EF) composes with the async engine: prefetched
+    history == sync history, and the comm summary reports codec-true
+    upload bytes (10-param model: int8 = 14 B/client, topk k=1 = 8 B)."""
+    cfg = CompressionConfig(codec, topk_frac=0.1)
+    sync = _fedmeta_history("fomaml", packed=True, compression=cfg)
+    piped = _fedmeta_history("fomaml", packed=True, compression=cfg,
+                             prefetch_depth=2, flush_every=4)
+    assert piped == sync
+    last = sync[-1]
+    assert last["codec"] == cfg.label()
+    per_client = cfg.upload_bytes(10)          # n_real of _TinyModel
+    assert last["upload_MB"] * 1e6 == pytest.approx(
+        last["rounds"] * 4 * per_client)
+    # download leg stays dense φ
+    assert last["download_MB"] * 1e6 == pytest.approx(
+        last["rounds"] * 4 * 40)
+
+
+def test_compressed_dp_pipelined_bit_identical():
+    """int8 + EF + DP clip + noise, prefetched == sync (the noise key is
+    a pure function of the round index)."""
+    kw = dict(packed=True, compression=CompressionConfig("int8"),
+              dp=DPConfig(clip_norm=0.5, noise_multiplier=0.3, seed=3))
+    assert _fedmeta_history("fomaml", prefetch_depth=2, flush_every=4,
+                            **kw) == _fedmeta_history("fomaml", **kw)
+
+
+def test_ef_state_in_checkpoint_resume(tmp_path):
+    """Kill-and-resume with EF residuals: the stitched history equals
+    the uninterrupted run record-for-record — EF state rides the
+    checkpoint payload and replays bit-identically."""
+    from repro.checkpoint.io import latest_step, load_server_state
+
+    def make(ckpt=None):
+        algo = make_algorithm("fomaml", LOSS_FN, EVAL_FN, inner_lr=0.05)
+        kw = dict(checkpoint_dir=str(ckpt), checkpoint_every=3) if ckpt \
+            else {}
+        return FederatedTrainer(algo, adam(1e-3), TRAIN, 4,
+                                support_frac=0.5, support_size=8,
+                                query_size=8, seed=0, packed=True,
+                                compression=CompressionConfig("int8"), **kw)
+
+    full = make()
+    state = full.init(jax.random.PRNGKey(0), _TinyModel.init)
+    assert state["ef"].shape == (len(TRAIN), 1024)   # one row per client
+    state = full.run(state, 9, eval_every=3, eval_clients=EVAL)
+    assert np.any(np.asarray(state["ef"]))           # residuals accrued
+
+    tr1 = make(tmp_path)
+    s1 = tr1.init(jax.random.PRNGKey(0), _TinyModel.init)
+    tr1.run(s1, 6, eval_every=3, eval_clients=EVAL)
+    assert latest_step(str(tmp_path)) == 6
+    payload = load_server_state(str(tmp_path))
+    assert "ef" in payload["state"]                  # EF rides the payload
+
+    tr2 = make(tmp_path)
+    tr2.init(jax.random.PRNGKey(0), _TinyModel.init)
+    s2, start = tr2.resume()
+    assert start == 6
+    tr2.run(s2, 9, eval_every=3, eval_clients=EVAL, start_round=start)
+    assert tr2.history == full.history
+
+
+# ---- DP: fused path vs privacy oracle + σ hand-check --------------------
+
+def test_dp_clip_matches_dp_aggregate():
+    """Noise off: the fused clip-as-weight-scale aggregate equals
+    `privacy.dp_aggregate`'s clip-then-weighted-mean to f32 tolerance."""
+    G, w = _block(m=4, n=1024, seed=3), _weights(m=4)
+    S = 0.7
+    fused = mu_ops.weighted_aggregate(
+        G, w * dp_clip_factors(
+            jnp.sqrt(jnp.sum(G * G, axis=1)), S), impl="xla")
+    oracle = dp_aggregate({"g": G}, w, jax.random.PRNGKey(0),
+                          clip_norm=S, noise_multiplier=0.0)["g"]
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(oracle),
+                               atol=1e-6)
+
+
+def test_sigma_effective_hand_check():
+    """σ_effective = noise_multiplier · S / m: DPConfig.sigma pins the
+    formula and `dp_aggregate`'s output on zero gradients is pure noise
+    whose empirical std matches it (satellite: the accounting surface
+    is hand-checked, not just self-consistent)."""
+    z, S, m = 1.3, 0.9, 6
+    assert DPConfig(clip_norm=S, noise_multiplier=z).sigma(m) == \
+        pytest.approx(z * S / m)
+    G = jnp.zeros((m, 50_000), jnp.float32)
+    w = jnp.ones((m,), jnp.float32) / m
+    out = dp_aggregate({"g": G}, w, jax.random.PRNGKey(42),
+                       clip_norm=S, noise_multiplier=z)["g"]
+    assert float(jnp.std(out)) == pytest.approx(z * S / m, rel=0.05)
+    assert float(jnp.mean(out)) == pytest.approx(0.0, abs=3 * z * S / m /
+                                                 np.sqrt(50_000))
+
+
+def test_dp_noise_leaves_padding_zero():
+    """The fused step masks noise to the REAL coordinates: φ's alignment
+    padding stays exactly zero through a noisy DP run (the packed
+    plane's padding invariant)."""
+    algo = make_algorithm("fomaml", LOSS_FN, EVAL_FN, inner_lr=0.05)
+    tr = FederatedTrainer(algo, adam(1e-3), TRAIN, 4, support_frac=0.5,
+                          support_size=8, query_size=8, seed=0, packed=True,
+                          dp=DPConfig(clip_norm=0.5, noise_multiplier=1.0,
+                                      seed=9))
+    state = tr.init(jax.random.PRNGKey(0), _TinyModel.init)
+    state = tr.run(state, 4)
+    phi = np.asarray(state["phi"])
+    assert phi.shape == (1024,)
+    assert not np.any(phi[10:])                  # n_real = 10
+
+
+# ---- quantized optimizer state ------------------------------------------
+
+def test_bf16_opt_state_pinned_tolerance():
+    """fused-Adam with bf16 m/v (dequantized in-kernel) tracks the f32
+    run within a pinned tolerance over 10 packed steps, and the state
+    really is stored in bf16 (half the optimizer-state bytes)."""
+    algo = make_algorithm("fomaml", LOSS_FN, EVAL_FN, inner_lr=0.05)
+    rng = np.random.RandomState(0)
+    sup = (jnp.asarray(rng.normal(0, 1, (4, 8, 4)), jnp.float32),
+           jnp.asarray(rng.randint(0, 2, (4, 8))))
+    qry = (jnp.asarray(rng.normal(0, 1, (4, 8, 4)), jnp.float32),
+           jnp.asarray(rng.randint(0, 2, (4, 8))))
+    phi = algo.init_state(jax.random.PRNGKey(0), _TinyModel.init)
+    plane = plane_for(phi)
+
+    def run(state_dtype):
+        opt = adam(1e-2, state_dtype=state_dtype)
+        step = make_packed_meta_train_step(algo, opt, plane, impl="xla")
+        state = init_packed_state(opt, plane, phi)
+        for _ in range(10):
+            state, _ = step(state, sup, qry)
+        return state
+
+    f32, bf16 = run(jnp.float32), run(jnp.bfloat16)
+    assert bf16["opt"]["m"].dtype == jnp.bfloat16
+    assert bf16["opt"]["v"].dtype == jnp.bfloat16
+    assert f32["opt"]["m"].dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(bf16["phi"]),
+                               np.asarray(f32["phi"]), atol=5e-3)
