@@ -1,0 +1,194 @@
+"""Serving-plane benchmark: adaptation-on-demand latency/throughput.
+
+Measures the two halves of the personalized serving engine
+(`federated.serving.ServingEngine`, DESIGN.md §18):
+
+  adapt rows    cold-cache adaptation latency (p50/p99 ms per request)
+                and sustained requests/s vs. adaptation batch size on
+                the deep-narrow MLP meta-task (shared with
+                meta_step_bench) — the axis the (chunk, N) plane kernel
+                is supposed to win: one fused inner-update serves B
+                concurrent clients for ~the cost of one.
+  e2e row       reduced-LM end-to-end serve (Zipf traffic -> cache ->
+                adapt -> prefill -> decode) with cache hit rate and
+                decode p50 — the deployment path of paper §3.2.
+
+Timing discipline: one untimed serve compiles every executable, then
+the cache and counters reset and `reps` timed serves run on the same
+request stream (min wall -> requests/s; latency percentiles come from
+the fastest rep).
+
+Usage:
+  PYTHONPATH=src python benchmarks/serve_bench.py            # full
+  PYTHONPATH=src python benchmarks/serve_bench.py --dry-run  # CI smoke
+Emits results/bench/BENCH_serve.json (see --out).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.meta_step_bench import SCALES, _build_task
+
+
+def _mlp_requests(scale_cfg, n, batch, seed=0):
+    """n single-client requests with distinct clients (cold cache path).
+    Support shape matches `_build_task`'s per-client (batch, D) slices."""
+    import jax.numpy as jnp
+
+    from repro.federated.serving import ServeRequest
+
+    D = scale_cfg["in_dim"]
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for i in range(n):
+        sup = (jnp.asarray(rng.normal(0, 1, (batch, D)), jnp.float32),
+               jnp.asarray(rng.normal(0, 1, (batch, D)), jnp.float32))
+        reqs.append(ServeRequest(rid=i, client=i, arrival=float(i), support=sup))
+    return reqs
+
+
+def _timed_serves(engine, requests, reps, **kw):
+    """Warmup-compile, then `reps` cold-cache serves; returns the report
+    of the fastest rep plus the min wall."""
+    engine.serve(requests, **kw)                 # compile everything
+    best = None
+    for _ in range(reps):
+        engine.cache.clear()
+        rep = engine.serve(requests, **kw)
+        if best is None or rep.wall_s < best.wall_s:
+            best = rep
+    return best
+
+
+def _bench_adapt(dry: bool, reps: int):
+    from repro.core import make_algorithm  # noqa: F401  (env sanity)
+    from repro.federated.serving import AdaptationCache, ServingEngine
+
+    scale = "tiny" if dry else "small"
+    batches = (1, 2) if dry else (1, 2, 4, 8, 16)
+    per_batch = 2 if dry else 8
+    data_batch = 8
+    rows = []
+    algo, model_init, _, _, _ = _build_task(SCALES[scale], 2, data_batch)
+    import jax
+    phi = algo.init_state(jax.random.PRNGKey(0), model_init)
+    for B in batches:
+        n = B * per_batch
+        reqs = _mlp_requests(SCALES[scale], n, data_batch)
+        engine = ServingEngine(algo, phi, adapt_batch=B,
+                               cache=AdaptationCache(None))
+        rep = _timed_serves(engine, reqs, reps)
+        s = rep.summary()
+        rows.append({"section": "adapt", "scale": scale, "adapt_batch": B,
+                     "requests": n,
+                     "adapt_p50_ms": s["adapt_p50_ms"],
+                     "adapt_p99_ms": s["adapt_p99_ms"],
+                     "requests_per_s": s["requests_per_s"],
+                     "wall_s": rep.wall_s})
+        print(f"adapt B={B:3d}: p50 {s['adapt_p50_ms']:8.3f} ms  "
+              f"p99 {s['adapt_p99_ms']:8.3f} ms  "
+              f"{s['requests_per_s']:8.1f} req/s", flush=True)
+    return rows
+
+
+def _bench_e2e(dry: bool, reps: int):
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, reduced_config
+    from repro.federated.serving import TrafficModel
+    from repro.launch.serve import build_engine
+
+    cfg = reduced_config(get_config("smollm-360m"))
+    n, tokens, prompt_len = (6, 2, 8) if dry else (24, 4, 16)
+    engine = build_engine(cfg, adapt_batch=2, cache_capacity=16)
+    traffic = TrafficModel(num_clients=max(2, n // 3), rate=32.0,
+                           support_sizes=(2, 4), think_time=0.01, seed=0)
+    make_support = lambda r, size: jnp.asarray(
+        r.randint(0, cfg.vocab_size, (size, 32)), jnp.int32)
+    make_prompt = lambda r: jnp.asarray(
+        r.randint(0, cfg.vocab_size, (prompt_len,)), jnp.int32)
+    reqs = traffic.requests(n, make_support, make_prompt)
+    rep = _timed_serves(engine, reqs, reps, max_new_tokens=tokens)
+    s = rep.summary()
+    row = {"section": "e2e", "arch": cfg.name, "requests": n,
+           "max_new_tokens": tokens, "prompt_len": prompt_len,
+           "hits": s["hits"], "misses": s["misses"],
+           "adapt_p50_ms": s["adapt_p50_ms"],
+           "adapt_p99_ms": s["adapt_p99_ms"],
+           "decode_p50_ms": s.get("decode_p50_ms"),
+           "requests_per_s": s["requests_per_s"],
+           "cache": s["cache"], "wall_s": rep.wall_s}
+    print(f"e2e {cfg.name}: {s['hits']}/{n} hits  "
+          f"adapt p50 {s['adapt_p50_ms']:.1f} ms  "
+          f"{s['requests_per_s']:.2f} req/s", flush=True)
+    return [row]
+
+
+def _summarize(adapt_rows, e2e_rows):
+    by_b = {r["adapt_batch"]: r for r in adapt_rows}
+    bmax = max(by_b)
+    out = {
+        "throughput_by_batch": {str(b): by_b[b]["requests_per_s"]
+                                for b in sorted(by_b)},
+        "batch_speedup": (by_b[bmax]["requests_per_s"]
+                          / by_b[1]["requests_per_s"]) if 1 in by_b else None,
+        "best_requests_per_s": max(r["requests_per_s"] for r in adapt_rows),
+    }
+    if e2e_rows:
+        e = e2e_rows[0]
+        out["e2e"] = {"arch": e["arch"], "hit_rate": e["hits"] / e["requests"],
+                      "requests_per_s": e["requests_per_s"],
+                      "decode_p50_ms": e["decode_p50_ms"]}
+    return out
+
+
+def run(*, dry: bool = False, reps: int = 5,
+        json_out: str = "results/bench/BENCH_serve.json"):
+    import jax
+
+    reps = 1 if dry else reps
+    t0 = time.perf_counter()
+    adapt_rows = _bench_adapt(dry, reps)
+    e2e_rows = _bench_e2e(dry, reps)
+    report = {
+        "bench": "serve",
+        "backend": jax.default_backend(),
+        "devices": jax.device_count(),
+        "dry_run": dry,
+        "reps": reps,
+        "adapt_rows": adapt_rows,
+        "e2e_rows": e2e_rows,
+        "summary": _summarize(adapt_rows, e2e_rows),
+        "bench_wall_s": time.perf_counter() - t0,
+    }
+    os.makedirs(os.path.dirname(json_out) or ".", exist_ok=True)
+    with open(json_out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {json_out}", flush=True)
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny scale, 1 rep — CI smoke")
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--out", default=None,
+                    help="output JSON; defaults to results/bench/ "
+                         "for full runs, the gitignored smoke/ dir for "
+                         "--dry-run so a doc-following smoke cannot "
+                         "clobber the committed artifact")
+    args = ap.parse_args()
+    if args.out is None:
+        args.out = ("results/bench/smoke/BENCH_serve.json" if args.dry_run
+                    else "results/bench/BENCH_serve.json")
+    run(dry=args.dry_run, reps=args.reps, json_out=args.out)
+
+
+if __name__ == "__main__":
+    main()

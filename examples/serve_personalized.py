@@ -1,67 +1,63 @@
-"""Personalized serving (the deployment path of paper §3.2): adapt the
-meta-learned initialization to a client's support set, then serve batched
-decode requests against a prefilled KV cache — the same prefill/decode
-entry points the dry-run lowers at production scale.
+"""Personalized serving (the deployment path of paper §3.2) through the
+adaptation-on-demand engine: seeded synthetic traffic hits a
+`ServingEngine` that batches support-set adaptations on the training
+kernel's (chunk, N) plane, caches adapted rows per client, and serves
+each request's prompt through prefill + decode under its own θ_u.
 
-  PYTHONPATH=src python examples/serve_personalized.py --tokens 16
+  PYTHONPATH=src python examples/serve_personalized.py --tokens 8
+  PYTHONPATH=src python examples/serve_personalized.py --dry-run   # CI
 """
 import argparse
-import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced_config
-from repro.core import make_algorithm
-from repro.core.losses import lm_loss
-from repro.launch.steps import make_apply_fn, make_decode_step, make_prefill_step
-from repro.models import init_lm
+from repro.federated.serving import TrafficModel
+from repro.launch.serve import build_engine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-2b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--adapt-batch", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="smallest settings that still cover "
+                         "adapt -> cache -> prefill -> decode (CI smoke)")
     args = ap.parse_args()
 
+    if args.dry_run:
+        args.requests, args.clients = 4, 2
+        args.prompt_len, args.tokens = 8, 2
+
     cfg = reduced_config(get_config(args.arch))
-    rng = np.random.RandomState(0)
-    params = init_lm(jax.random.PRNGKey(0), cfg)
+    engine = build_engine(cfg, adapt_batch=args.adapt_batch, seed=args.seed)
 
-    # ---- 1. per-client adaptation (FedMeta deployment step)
-    loss_fn, eval_fn = lm_loss(make_apply_fn(cfg))
-    algo = make_algorithm("fomaml", loss_fn, eval_fn, inner_lr=0.05)
-    support = jnp.asarray(rng.randint(0, cfg.vocab_size, (4, 64)), jnp.int32)
-    theta_u = algo.adapt({"theta": params}, support)
-    print(f"adapted {cfg.name} to client support set "
-          f"({support.shape[0]} sequences)")
+    traffic = TrafficModel(num_clients=args.clients, rate=16.0,
+                           support_sizes=(2, 4), think_time=0.01,
+                           seed=args.seed)
+    make_support = lambda r, size: jnp.asarray(
+        r.randint(0, cfg.vocab_size, (size, 32)), jnp.int32)
+    make_prompt = lambda r: jnp.asarray(
+        r.randint(0, cfg.vocab_size, (args.prompt_len,)), jnp.int32)
+    requests = traffic.requests(args.requests, make_support, make_prompt)
+    print(f"{cfg.name}: {len(requests)} requests from "
+          f"{args.clients} clients (Poisson arrivals, per-client support)")
 
-    # ---- 2. batched prefill
-    prefill = jax.jit(make_prefill_step(cfg))
-    decode = jax.jit(make_decode_step(cfg))
-    prompts = jnp.asarray(
-        rng.randint(0, cfg.vocab_size, (args.batch, args.prompt_len)),
-        jnp.int32)
-    logits, cache = prefill(theta_u, {"tokens": prompts})
-    next_tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-    print(f"prefilled {args.batch} requests x {args.prompt_len} tokens; "
-          f"cache length = {int(cache['length'])}")
-
-    # ---- 3. decode loop
-    out = [next_tok]
-    t0 = time.perf_counter()
-    for _ in range(args.tokens - 1):
-        logits, cache = decode(theta_u, cache, next_tok)
-        next_tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        out.append(next_tok)
-    dt = (time.perf_counter() - t0) / (args.tokens - 1)
-    gen = jnp.concatenate(out, axis=1)
-    print(f"generated {gen.shape} tokens, {dt*1e3:.1f} ms/token/batch "
-          f"(CPU reduced config)")
-    print("sample:", np.asarray(gen[0])[:12].tolist())
+    report = engine.serve(requests, max_new_tokens=args.tokens)
+    s = report.summary()
+    print(f"served {s['requests']} requests: {s['hits']} cache hits, "
+          f"{s['misses']} adaptations "
+          f"(p50 {s['adapt_p50_ms']:.1f} ms, p99 {s['adapt_p99_ms']:.1f} ms)")
+    print(f"decode p50 {s.get('decode_p50_ms', 0.0):.1f} ms for "
+          f"{args.tokens} tokens; {s['requests_per_s']:.2f} req/s "
+          f"(CPU reduced config, cold compile included)")
+    print("sample:", np.asarray(report.records[0]["tokens"]).tolist())
 
 
 if __name__ == "__main__":

@@ -149,14 +149,31 @@ class MetaAlgorithm:
         inner loop runs fused over flat θ (paper §3.2). Returns the
         adapted θ as a pytree."""
         tplane = plane or plane_for(phi["theta"])
-        Theta = tplane.pack(phi["theta"])[None]
+        sup = jax.tree.map(lambda x: x[None], support)
+        Theta = self.adapt_packed_batch(phi, sup, steps, impl=impl,
+                                        plane=tplane)
+        return tplane.unpack(Theta[0])
+
+    def adapt_packed_batch(self, phi, supports, steps: int | None = None, *,
+                           impl=None, plane=None):
+        """Deployment at serving scale: C concurrent clients adapt in
+        lockstep on the flat (C, N) client plane — the same fused
+        ``inner_update_plane`` kernel that powers training. ``supports``
+        leaves carry a leading C axis (client c's support set is row c).
+        Rows are independent — row c only enters client c's loss — so
+        each adapted row is bit-identical to that client's solo
+        ``adapt``/``adapt_packed`` (the serving plane's contract,
+        pinned by tests/test_serving.py). Returns the adapted
+        (C, n_padded) plane; rows unpack via ``plane_for(phi["theta"])``.
+        """
+        tplane = plane or plane_for(phi["theta"])
+        C = _chunk_len(supports)
+        Theta = _broadcast_plane(tplane.pack(phi["theta"]), C)
         alpha = phi.get("alpha")
         alpha = self.inner_lr if alpha is None else tplane.pack(alpha)
-        sup = jax.tree.map(lambda x: x[None], support)
-        Theta = _inner_adapt_plane(self.loss_fn, tplane, Theta, alpha, sup,
-                                   steps or self.inner_steps,
-                                   second_order=False, impl=impl)
-        return tplane.unpack(Theta[0])
+        return _inner_adapt_plane(self.loss_fn, tplane, Theta, alpha,
+                                  supports, steps or self.inner_steps,
+                                  second_order=False, impl=impl)
 
     def query_metrics(self, phi, support, query):
         theta_u = self.adapt(phi, support)

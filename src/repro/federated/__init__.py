@@ -12,6 +12,9 @@ from repro.federated.privacy import (DPConfig, add_gaussian_noise,
 from repro.kernels.meta_update.compress import CompressionConfig
 from repro.federated.population import (CircuitBreaker, RoundPlan,
                                         UnreliabilityConfig, plan_round)
+from repro.federated.serving import (AdaptationCache, ServeReport,
+                                     ServeRequest, ServingEngine,
+                                     TrafficModel, support_digest)
 from repro.federated.server import FederatedTrainer, evaluate_meta, evaluate_global
 from repro.federated.experiment import (ExperimentPlan, comm_to_target,
                                         default_plan, run_comparison)

@@ -1,0 +1,421 @@
+"""Personalized serving plane: adaptation-on-demand (paper §3.2).
+
+The deployment half of FedMeta: an incoming client request carries a
+support set D_S^u; the server (or the device runtime) adapts the
+meta-learned initialization θ to that client and answers queries with
+θ_u. This module turns that story into an engine:
+
+  TrafficModel      seeded synthetic open-loop traffic — Poisson
+                    arrivals, Zipf-skewed client popularity,
+                    heterogeneous support-set sizes, per-client think
+                    time. Every draw is a pure function of
+                    (seed, request id) via the same stateless
+                    `SeedSequence` pattern as `population._draw_rng`,
+                    so the request stream is identical under any batch
+                    schedule.
+  AdaptationCache   bounded thread-safe LRU of adapted flat rows φ_u,
+                    keyed (client, φ-version, support digest) — the
+                    `ClientRegistry` cache discipline (leaf lock,
+                    hit/miss/eviction/peak counters).
+  ServingEngine     batches concurrent cache-miss adaptations through
+                    `MetaAlgorithm.adapt_packed_batch` — the SAME fused
+                    `inner_update` (chunk, N) plane kernel that powers
+                    training — then serves queries through the
+                    prefill + flash-decode path, vmapped across
+                    requests with per-request adapted parameters.
+
+Bit-identity contract: plane rows are independent (row c only enters
+client c's loss), so every served φ_u is bit-identical to that
+client's solo `jax.jit(adapt)` / `jax.jit(adapt_packed)` — at any
+batch size, under any batch composition — pinned by
+tests/test_serving.py. Padding rows (partial batches are padded to the
+compiled batch size by replicating the last request) therefore never
+perturb real rows. The identity holds between *jitted* paths (training
+is always jitted); eager op-by-op dispatch fuses differently and can
+drift by 1 ulp.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import threading
+import time
+from collections import OrderedDict
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.federated.population import _draw_rng
+from repro.utils.flat import plane_for
+
+__all__ = ["TrafficModel", "AdaptationCache", "ServeRequest",
+           "ServingEngine", "ServeReport", "support_digest"]
+
+
+# ----------------------------------------------------------- traffic model
+
+@dataclasses.dataclass(frozen=True)
+class ServeRequest:
+    """One serving request: client u asks for `prompt` to be continued
+    under its personalized model, supplying the support set to adapt
+    with. `arrival` is the (simulated) arrival time in seconds."""
+    rid: int
+    client: int
+    arrival: float
+    support: Any
+    prompt: Any = None
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficModel:
+    """Seeded synthetic serving traffic.
+
+    Arrivals are Poisson with mean `rate` requests/s; the requesting
+    client is Zipf-skewed (popularity ∝ rank^-hot_skew, so a small hot
+    set dominates — what makes the adaptation cache earn its keep);
+    each *client* owns a support-set size drawn uniformly from
+    `support_sizes` (its on-device data is stable across requests, so
+    repeat requests from a client hit the adaptation cache); and a
+    client never issues two requests closer than `think_time` seconds
+    (its later arrival is floored to previous + think_time, then the
+    table is re-sorted by time).
+
+    Everything is a pure function of `seed`: the arrival table is drawn
+    from one `_draw_rng(seed, _TABLE_SALT)` stream, each client's
+    support set from `_draw_rng(seed, salt, client)`, and each
+    request's prompt from `_draw_rng(seed, salt, rid)` — so the stream
+    an engine sees is identical no matter how requests are batched or
+    replayed (pinned by tests/test_serving.py).
+    """
+    num_clients: int = 32
+    rate: float = 8.0
+    support_sizes: tuple = (2, 4)
+    hot_skew: float = 1.0
+    think_time: float = 0.0
+    seed: int = 0
+
+    _TABLE_SALT = 0x5EF1
+    _SUPPORT_SALT = 0x5EF2
+    _PROMPT_SALT = 0x5EF3
+
+    def arrival_table(self, n: int) -> tuple:
+        """First `n` arrivals as ((rid, client, time, support_size), ...),
+        sorted by (time, rid). Pure function of (seed, n), and
+        content-stable under extension: every rid < m row of
+        `arrival_table(n)` equals its `arrival_table(m)` row for m <= n
+        (each field draws from its own salted stream, and think-time
+        flooring is causal in rid order) — only sort *positions* can
+        shift when later arrivals interleave."""
+        gaps = _draw_rng(self.seed, self._TABLE_SALT, 0).exponential(
+            1.0 / self.rate, size=n)
+        times = np.cumsum(gaps)
+        ranks = np.arange(self.num_clients, dtype=np.float64)
+        w = (ranks + 1.0) ** -self.hot_skew
+        clients = _draw_rng(self.seed, self._TABLE_SALT, 1).choice(
+            self.num_clients, size=n, p=w / w.sum())
+        by_client = _draw_rng(self.seed, self._TABLE_SALT, 2).choice(
+            np.asarray(self.support_sizes), size=self.num_clients)
+        sizes = by_client[clients]
+        if self.think_time > 0.0:
+            last: dict = {}
+            for i in range(n):          # rid order == raw arrival order
+                c = int(clients[i])
+                floor = last.get(c)
+                if floor is not None and times[i] < floor + self.think_time:
+                    times[i] = floor + self.think_time
+                last[c] = times[i]
+        order = sorted(range(n), key=lambda i: (times[i], i))
+        return tuple((i, int(clients[i]), float(times[i]), int(sizes[i]))
+                     for i in order)
+
+    def requests(self, n: int, make_support: Callable,
+                 make_prompt: Optional[Callable] = None) -> tuple:
+        """Materialize the first `n` requests. `make_support(rng, size)`
+        (and optionally `make_prompt(rng)`) build the task-specific
+        payloads from a stateless keyed RandomState — supports per
+        *client* (stable on-device data), prompts per *request* — so
+        content never depends on processing order."""
+        out = []
+        for rid, client, t, size in self.arrival_table(n):
+            sup = make_support(
+                _draw_rng(self.seed, self._SUPPORT_SALT, client), size)
+            prm = (make_prompt(_draw_rng(self.seed, self._PROMPT_SALT, rid))
+                   if make_prompt is not None else None)
+            out.append(ServeRequest(rid=rid, client=client, arrival=t,
+                                    support=sup, prompt=prm))
+        return tuple(out)
+
+
+# -------------------------------------------------------- adaptation cache
+
+def support_digest(support) -> str:
+    """Content digest of a support pytree (shape/dtype/bytes of every
+    leaf, in canonical traversal order) — the cache-key component that
+    invalidates a client's cached φ_u when its on-device data changes."""
+    h = hashlib.sha1()
+    for leaf in jax.tree.leaves(support):
+        a = np.asarray(leaf)
+        h.update(str(a.shape).encode())
+        h.update(str(a.dtype).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+class AdaptationCache:
+    """Bounded thread-safe LRU of adapted flat rows, keyed
+    (client, φ-version, support digest).
+
+    Same cache discipline as `data.registry.ClientRegistry`:
+    ``self._lock`` is a **leaf** lock guarding only the store and the
+    counters, never held across a blocking call, and
+    ``stats()["peak_resident"]`` proves the bound. ``capacity=None``
+    means unbounded."""
+
+    def __init__(self, capacity: Optional[int] = 64):
+        if capacity is not None and capacity < 1:
+            raise ValueError("capacity must be >= 1 (or None)")
+        self.capacity = capacity
+        self._store: OrderedDict = OrderedDict()
+        self._lock = threading.Lock()
+        self._hits = self._misses = self._evictions = 0
+        self._peak = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._store)
+
+    def get(self, key):
+        with self._lock:
+            if key in self._store:
+                self._hits += 1
+                self._store.move_to_end(key)
+                return self._store[key]
+            self._misses += 1
+            return None
+
+    def put(self, key, row) -> None:
+        with self._lock:
+            self._store[key] = row
+            self._store.move_to_end(key)
+            cap = self.capacity
+            while cap is not None and len(self._store) > cap:
+                self._store.popitem(last=False)
+                self._evictions += 1
+            self._peak = max(self._peak, len(self._store))
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"hits": self._hits, "misses": self._misses,
+                    "evictions": self._evictions,
+                    "resident": len(self._store),
+                    "peak_resident": self._peak,
+                    "capacity": self.capacity}
+
+    def clear(self) -> None:
+        """Drop entries and counters (bench warmup→measure reset)."""
+        with self._lock:
+            self._store.clear()
+            self._hits = self._misses = self._evictions = 0
+            self._peak = 0
+
+
+# ----------------------------------------------------------- serve report
+
+@dataclasses.dataclass
+class ServeReport:
+    """Per-request records + wall time for one `ServingEngine.serve`."""
+    records: list
+    wall_s: float
+    cache_stats: dict
+
+    def summary(self) -> dict:
+        n = len(self.records)
+        hits = sum(1 for r in self.records if r["hit"])
+        adapt = np.asarray([r["adapt_ms"] for r in self.records], np.float64)
+        out = {"requests": n, "hits": hits, "misses": n - hits,
+               "wall_s": self.wall_s,
+               "requests_per_s": (n / self.wall_s if self.wall_s > 0
+                                  else float("inf")),
+               "adapt_p50_ms": float(np.percentile(adapt, 50)) if n else 0.0,
+               "adapt_p99_ms": float(np.percentile(adapt, 99)) if n else 0.0,
+               "cache": self.cache_stats}
+        dec = np.asarray([r["decode_ms"] for r in self.records
+                          if r.get("decode_ms") is not None], np.float64)
+        if dec.size:
+            out["decode_p50_ms"] = float(np.percentile(dec, 50))
+            out["decode_p99_ms"] = float(np.percentile(dec, 99))
+        return out
+
+
+# ----------------------------------------------------------- serving engine
+
+def _shape_sig(tree) -> tuple:
+    return tuple((np.shape(x), str(np.asarray(x).dtype))
+                 for x in jax.tree.leaves(tree))
+
+
+class ServingEngine:
+    """Adaptation-on-demand: batch concurrent support-set adaptations
+    on the training kernel's (chunk, N) plane, cache φ_u rows, serve
+    decode.
+
+    `serve(requests)` processes requests in arrival order:
+
+      1. cache lookup under (client, φ-version, support digest) — a hit
+         skips adaptation entirely (adapt_ms = 0);
+      2. misses are bucketed by support *shape signature* (heterogeneous
+         sizes never share a compiled executable), and each bucket is
+         flushed through the jitted `adapt_packed_batch` when it holds
+         `adapt_batch` requests — partial buckets at end-of-stream are
+         padded to `adapt_batch` by replicating the last request, which
+         is sound because plane rows are independent;
+      3. with `max_new_tokens > 0` and prefill/decode fns wired in,
+         adapted requests are grouped by prompt shape and decoded
+         vmapped-across-requests, each request under its own φ_u.
+
+    Duplicate keys inside one un-flushed bucket are not coalesced: they
+    occupy separate rows, which is wasteful but bit-identical (the
+    second write wins with an equal row). The engine is a
+    single-threaded orchestrator; only `AdaptationCache` is shared.
+    """
+
+    def __init__(self, algo, phi, *, adapt_batch: int = 4,
+                 adapt_steps: Optional[int] = None,
+                 cache: Optional[AdaptationCache] = None,
+                 prefill_fn: Optional[Callable] = None,
+                 decode_fn: Optional[Callable] = None,
+                 impl: Optional[str] = None, phi_version: int = 0):
+        if adapt_batch < 1:
+            raise ValueError("adapt_batch must be >= 1")
+        self.algo = algo
+        self.adapt_batch = int(adapt_batch)
+        self.adapt_steps = adapt_steps
+        self.cache = cache if cache is not None else AdaptationCache()
+        self.phi_version = int(phi_version)
+        self._phi = phi
+        self.plane = plane_for(phi["theta"])
+        self._prefill_fn = prefill_fn
+        self._decode_fn = decode_fn
+        self._gen_fns: dict = {}
+
+        plane = self.plane
+
+        def _adapt(phi_, supports):
+            return algo.adapt_packed_batch(phi_, supports, adapt_steps,
+                                           impl=impl, plane=plane)
+
+        self._adapt = jax.jit(_adapt)
+
+    # -- φ lifecycle ------------------------------------------------------
+
+    def publish_phi(self, phi) -> None:
+        """Install a fresh meta-initialization. Bumps the φ-version so
+        every cached row goes stale by keying (no eager invalidation —
+        stale entries age out of the LRU)."""
+        self._phi = phi
+        self.phi_version += 1
+
+    def unpack_row(self, row):
+        """Adapted flat row -> parameter pytree (serving-side θ_u)."""
+        return self.plane.unpack(row)
+
+    # -- adaptation -------------------------------------------------------
+
+    def _flush(self, items: list, records: dict) -> None:
+        t0 = time.perf_counter()
+        reqs = [r for r, _ in items]
+        padded = reqs + [reqs[-1]] * (self.adapt_batch - len(reqs))
+        supports = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                *[r.support for r in padded])
+        rows = jax.block_until_ready(self._adapt(self._phi, supports))
+        wall_ms = (time.perf_counter() - t0) * 1e3
+        for i, (req, key) in enumerate(items):
+            row = rows[i]
+            self.cache.put(key, row)
+            records[req.rid] = {"rid": req.rid, "client": req.client,
+                                "arrival": req.arrival, "hit": False,
+                                "adapt_ms": wall_ms, "batch_fill": len(items),
+                                "row": row}
+
+    # -- decode -----------------------------------------------------------
+
+    def _generate_fn(self, max_new_tokens: int):
+        fn = self._gen_fns.get(max_new_tokens)
+        if fn is not None:
+            return fn
+        plane, prefill, decode = self.plane, self._prefill_fn, self._decode_fn
+
+        def gen_one(row, prompt):
+            params = plane.unpack(row)
+            logits, cache = prefill(params, prompt[None])
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)   # (1,)
+
+            def step(carry, _):
+                t, c = carry
+                lg, c = decode(params, c, t[:, None])
+                nt = jnp.argmax(lg, -1).astype(jnp.int32)
+                return (nt, c), nt
+
+            if max_new_tokens == 1:
+                return tok
+            (_, _), rest = jax.lax.scan(step, (tok, cache), None,
+                                        length=max_new_tokens - 1)
+            return jnp.concatenate([tok[None], rest], axis=0)[:, 0]
+
+        fn = jax.jit(jax.vmap(gen_one))
+        self._gen_fns[max_new_tokens] = fn
+        return fn
+
+    # -- the serve loop ---------------------------------------------------
+
+    def serve(self, requests, *, max_new_tokens: int = 0) -> ServeReport:
+        """Serve a request stream (processed in (arrival, rid) order).
+        Returns a `ServeReport`; each record carries the adapted flat
+        row under "row" (unpack with `unpack_row`) and, when decoding,
+        the generated tokens under "tokens"."""
+        reqs = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        t_start = time.perf_counter()
+        records: dict = {}
+        buckets: OrderedDict = OrderedDict()
+        for req in reqs:
+            key = (req.client, self.phi_version, support_digest(req.support))
+            row = self.cache.get(key)
+            if row is not None:
+                records[req.rid] = {"rid": req.rid, "client": req.client,
+                                    "arrival": req.arrival, "hit": True,
+                                    "adapt_ms": 0.0, "batch_fill": 0,
+                                    "row": row}
+                continue
+            sig = _shape_sig(req.support)
+            buckets.setdefault(sig, []).append((req, key))
+            if len(buckets[sig]) == self.adapt_batch:
+                self._flush(buckets.pop(sig), records)
+        for sig in list(buckets):       # insertion order — deterministic
+            self._flush(buckets.pop(sig), records)
+
+        if max_new_tokens > 0:
+            if self._prefill_fn is None or self._decode_fn is None:
+                raise ValueError("decode requested but the engine has no "
+                                 "prefill_fn/decode_fn wired in")
+            gen = self._generate_fn(max_new_tokens)
+            groups: OrderedDict = OrderedDict()
+            for req in reqs:
+                if req.prompt is not None:
+                    groups.setdefault(np.shape(req.prompt), []).append(req)
+            for shape in list(groups):
+                greqs = groups.pop(shape)
+                rows = jnp.stack([records[r.rid]["row"] for r in greqs])
+                prompts = jnp.stack([jnp.asarray(r.prompt, jnp.int32)
+                                     for r in greqs])
+                t0 = time.perf_counter()
+                toks = jax.block_until_ready(gen(rows, prompts))
+                wall_ms = (time.perf_counter() - t0) * 1e3
+                for i, r in enumerate(greqs):
+                    records[r.rid]["tokens"] = np.asarray(toks[i])
+                    records[r.rid]["decode_ms"] = wall_ms
+
+        wall_s = time.perf_counter() - t_start
+        return ServeReport(records=[records[r.rid] for r in reqs],
+                           wall_s=wall_s, cache_stats=self.cache.stats())

@@ -4,6 +4,7 @@ impl: "xla" (oracle; default), "pallas", "pallas_interpret".
 """
 from __future__ import annotations
 
+import contextlib
 import os
 
 import jax.numpy as jnp
@@ -18,6 +19,20 @@ def set_default_impl(impl: str) -> None:
     global _DEFAULT_IMPL
     assert impl in ("xla", "pallas", "pallas_interpret")
     _DEFAULT_IMPL = impl
+
+
+@contextlib.contextmanager
+def use_impl(impl: str):
+    """Scoped default-impl override (restores on exit). The impl is
+    baked in at *trace* time: wrap the first call of a jitted serve
+    fn, not later replays of an already-compiled executable."""
+    global _DEFAULT_IMPL
+    prev = _DEFAULT_IMPL
+    set_default_impl(impl)
+    try:
+        yield
+    finally:
+        _DEFAULT_IMPL = prev
 
 
 def decode_attention(q, k_cache, v_cache, kv_length, *, impl=None,

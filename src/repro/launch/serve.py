@@ -1,5 +1,7 @@
 """Personalized serving launcher: prefill + batched decode on the
-production mesh (or --reduced on CPU).
+production mesh (or --reduced on CPU), plus the builders that wire an
+LM config into `federated.serving.ServingEngine` (adaptation-on-demand,
+DESIGN.md §18).
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
       --shape decode_32k --steps 4 --reduced
@@ -9,6 +11,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -17,10 +20,54 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import INPUT_SHAPES, get_config, list_archs, reduced_config
 from repro.launch.mesh import make_host_mesh, make_production_mesh
-from repro.launch.steps import (input_specs, make_decode_step,
+from repro.launch.steps import (input_specs, make_apply_fn, make_decode_step,
                                 make_prefill_step, resolve_serving_config)
 from repro.models import init_lm
 from repro.sharding.rules import param_pspecs
+
+
+def build_serving_fns(cfg, *, unroll_layers: bool = False):
+    """(prefill, decode) entry points for `ServingEngine` — the same
+    builders the dry-run lowers at production scale."""
+    return (make_prefill_step(cfg, unroll_layers=unroll_layers),
+            make_decode_step(cfg, unroll_layers=unroll_layers))
+
+
+def build_engine(cfg, phi=None, *, algo_name: str = "fomaml",
+                 inner_lr: float = 0.05, inner_steps: int = 1,
+                 adapt_batch: int = 4, cache_capacity: Optional[int] = 64,
+                 adapt_impl: Optional[str] = None,
+                 decode_impl: Optional[str] = None, seed: int = 0):
+    """Wire an LM config into a `ServingEngine`: FedMeta algorithm over
+    `lm_loss`, prefill/decode serve steps, bounded adaptation cache.
+    `phi` defaults to a fresh init (tests/benches); production passes
+    the meta-trained state. `decode_impl` pins the decode-attention
+    kernel ("xla" | "pallas" | "pallas_interpret") for everything this
+    engine traces."""
+    from repro.core import make_algorithm
+    from repro.core.losses import lm_loss
+    from repro.federated.serving import AdaptationCache, ServingEngine
+    from repro.kernels.decode_attention import ops as dec_ops
+
+    loss_fn, eval_fn = lm_loss(make_apply_fn(cfg, remat=False))
+    algo = make_algorithm(algo_name, loss_fn, eval_fn, inner_lr, inner_steps)
+    if phi is None:
+        phi = {"theta": init_lm(jax.random.PRNGKey(seed), cfg)}
+        if algo_name.startswith("meta-sgd"):
+            phi = algo.init_state(jax.random.PRNGKey(seed),
+                                  lambda k: init_lm(k, cfg))
+    prefill, decode = build_serving_fns(cfg)
+    if decode_impl is not None:
+        raw = decode
+
+        def decode(params, cache, tokens):
+            with dec_ops.use_impl(decode_impl):
+                return raw(params, cache, tokens)
+
+    return ServingEngine(algo, phi, adapt_batch=adapt_batch,
+                         adapt_steps=inner_steps,
+                         cache=AdaptationCache(cache_capacity),
+                         prefill_fn=prefill, decode_fn=decode)
 
 
 def main():
@@ -64,11 +111,11 @@ def main():
         cache["length"] = jnp.asarray(min(64, shape.seq_len), jnp.int32)
         tok = jnp.zeros((shape.global_batch, 1), jnp.int32)
         for it in range(args.steps):
-            t0 = time.time()
+            t0 = time.perf_counter()
             logits, cache = step(params, cache, tok)
             jax.block_until_ready(logits)
             tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-            print(f"decode step {it}: {time.time()-t0:.2f}s  "
+            print(f"decode step {it}: {time.perf_counter()-t0:.2f}s  "
                   f"logits {logits.shape}", flush=True)
 
 

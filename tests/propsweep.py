@@ -1,0 +1,103 @@
+"""Property-test shim: real `hypothesis` when installed, otherwise a
+deterministic seeded sweep with the same decorator surface.
+
+The three property suites (`test_properties`, `test_privacy`,
+`test_kernels_meta_update`) used to `importorskip("hypothesis")` —
+three perennial tier-1 skips on hosts without the optional dep. This
+module removes them: `from propsweep import given, settings, st`
+re-exports hypothesis verbatim when it imports, and otherwise runs the
+test body over `max_examples` deterministically-drawn example dicts
+(boundary values first, then draws seeded by the test's qualname —
+stable across runs and processes, no shared RNG state).
+
+The fallback supports exactly the strategy surface the suites use:
+`st.integers(lo, hi)`, `st.floats(lo, hi)`, `st.sampled_from(seq)`.
+It does not shrink failures — the failing example dict is in the
+assertion message instead. CI exercises both paths (the tier1 job
+installs hypothesis; tier1-no-hypothesis runs this fallback).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:        # deterministic fallback sweep
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """draw(rng, i): example i of a sweep — boundaries first."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng: np.random.RandomState, i: int):
+            return self._draw(rng, i)
+
+    class st:  # noqa: N801  (mirrors `hypothesis.strategies` alias)
+        @staticmethod
+        def integers(lo: int, hi: int):
+            def draw(rng, i):
+                if i == 0:
+                    return lo
+                if i == 1:
+                    return hi
+                return int(rng.randint(lo, hi + 1, dtype=np.int64))
+            return _Strategy(draw)
+
+        @staticmethod
+        def floats(lo: float, hi: float):
+            def draw(rng, i):
+                if i == 0:
+                    return float(lo)
+                if i == 1:
+                    return float(hi)
+                return float(lo + (hi - lo) * rng.random_sample())
+            return _Strategy(draw)
+
+        @staticmethod
+        def sampled_from(seq):
+            elems = list(seq)
+
+            def draw(rng, i):
+                if i < len(elems):
+                    return elems[i]
+                return elems[int(rng.randint(len(elems)))]
+            return _Strategy(draw)
+
+    def settings(*, max_examples: int = 20, deadline=None, **_ignored):
+        def deco(fn):
+            fn._propsweep_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def sweep(*args, **kwargs):
+                n = getattr(sweep, "_propsweep_max_examples", 20)
+                base = zlib.adler32(fn.__qualname__.encode()) & 0x7FFFFFFF
+                for i in range(n):
+                    rng = np.random.RandomState((base + i) % 2**31)
+                    example = {name: s.draw(rng, i)
+                               for name, s in strategies.items()}
+                    try:
+                        fn(*args, **example, **kwargs)
+                    except AssertionError as e:
+                        raise AssertionError(
+                            f"propsweep example {i}/{n} failed: "
+                            f"{example}") from e
+                return None
+
+            # hide the strategy params from pytest's fixture resolution
+            sig = inspect.signature(fn)
+            params = [p for name, p in sig.parameters.items()
+                      if name not in strategies]
+            sweep.__signature__ = sig.replace(parameters=params)
+            return sweep
+        return deco

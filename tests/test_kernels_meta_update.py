@@ -4,8 +4,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")  # optional dep; see test_meta_step_paths
-from hypothesis import given, settings, strategies as st
+# `propsweep` re-exports hypothesis when installed, else a
+# deterministic seeded sweep — no skip either way.
+from propsweep import given, settings, st
 
 from repro.kernels.meta_update.ops import meta_update
 

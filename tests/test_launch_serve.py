@@ -1,0 +1,108 @@
+"""First-ever tests for the launch/serving stack: the
+prefill -> adapt -> decode path on a reduced config, the engine
+builders in `launch.serve`, the decode-attention `use_impl` scope, and
+the example + launcher entry points as CI-runnable subprocesses."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.kernels.decode_attention import ops as dec_ops
+from repro.launch.serve import build_engine, build_serving_fns
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _env():
+    env = dict(os.environ)
+    src = str(REPO / "src")
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+    return env
+
+
+class TestServingFns:
+    def test_prefill_then_decode_shapes_and_cache(self):
+        """The serve entry points compose: prefill yields last-position
+        logits + a cache the decode step advances one token at a time."""
+        cfg = reduced_config(get_config("smollm-360m"))
+        from repro.models import init_lm
+        params = init_lm(jax.random.PRNGKey(0), cfg)
+        prefill, decode = build_serving_fns(cfg)
+        rng = np.random.RandomState(0)
+        B, L = 2, 16
+        prompts = jnp.asarray(rng.randint(0, cfg.vocab_size, (B, L)),
+                              jnp.int32)
+        logits, cache = jax.jit(prefill)(params, prompts)
+        assert logits.shape == (B, cfg.vocab_size)
+        assert int(cache["length"]) == L
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        logits2, cache = jax.jit(decode)(params, cache, tok)
+        assert logits2.shape == (B, cfg.vocab_size)
+        assert int(cache["length"]) == L + 1
+
+    def test_build_engine_serves_end_to_end(self):
+        """build_engine wires algorithm + serve fns + cache into an
+        engine that adapts and decodes (the example's path, inline)."""
+        cfg = reduced_config(get_config("smollm-360m"))
+        engine = build_engine(cfg, adapt_batch=2, cache_capacity=4, seed=0)
+        from repro.federated.serving import TrafficModel
+        tm = TrafficModel(num_clients=2, rate=50.0, support_sizes=(2,),
+                          seed=0)
+        reqs = tm.requests(
+            3,
+            lambda r, size: jnp.asarray(
+                r.randint(0, cfg.vocab_size, (size, 16)), jnp.int32),
+            lambda r: jnp.asarray(
+                r.randint(0, cfg.vocab_size, (8,)), jnp.int32))
+        report = engine.serve(reqs, max_new_tokens=2)
+        s = report.summary()
+        assert s["requests"] == 3
+        assert s["hits"] + s["misses"] == 3
+        for rec in report.records:
+            assert rec["tokens"].shape == (2,)
+            assert (0 <= rec["tokens"]).all()
+            assert (rec["tokens"] < cfg.vocab_size).all()
+
+    def test_use_impl_scopes_and_restores(self):
+        prev = dec_ops._DEFAULT_IMPL
+        with dec_ops.use_impl("pallas_interpret"):
+            assert dec_ops._DEFAULT_IMPL == "pallas_interpret"
+        assert dec_ops._DEFAULT_IMPL == prev
+        try:
+            with dec_ops.use_impl("xla"):
+                raise RuntimeError("boom")
+        except RuntimeError:
+            pass
+        assert dec_ops._DEFAULT_IMPL == prev    # restored on exception
+
+
+class TestEntryPoints:
+    def test_example_dry_run(self):
+        """examples/serve_personalized.py --dry-run: the CI smoke for
+        the full traffic -> adapt -> cache -> prefill -> decode path."""
+        out = subprocess.run(
+            [sys.executable, "examples/serve_personalized.py", "--dry-run",
+             "--arch", "smollm-360m"],
+            cwd=REPO, env=_env(), capture_output=True, text=True,
+            timeout=600)
+        assert out.returncode == 0, out.stderr[-2000:]
+        assert "served 4 requests" in out.stdout
+        assert "sample:" in out.stdout
+
+    def test_launch_serve_reduced(self):
+        """python -m repro.launch.serve --reduced: the decode launcher
+        runs on the host mesh (covers the perf_counter step timing)."""
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.launch.serve", "--arch",
+             "smollm-360m", "--shape", "decode_32k", "--steps", "2",
+             "--reduced"],
+            cwd=REPO, env=_env(), capture_output=True, text=True,
+            timeout=600)
+        assert out.returncode == 0, out.stderr[-2000:]
+        assert "decode step 1" in out.stdout

@@ -3,10 +3,10 @@ DP clip/noise behavior (beyond-paper; paper §5 future work)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-pytest.importorskip("hypothesis")  # optional dep
-from hypothesis import given, settings, strategies as st
+# `propsweep` re-exports hypothesis when installed, else a
+# deterministic seeded sweep — no skip either way.
+from propsweep import given, settings, st
 
 from repro.federated.privacy import (clip_gradient, dp_aggregate,
                                      masked_uploads, secure_sum)

@@ -2,10 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-pytest.importorskip("hypothesis")  # optional dep
-from hypothesis import given, settings, strategies as st
+# `propsweep` re-exports hypothesis when installed, else a
+# deterministic seeded sweep — no skip either way.
+from propsweep import given, settings, st
 
 from repro.core import make_algorithm, softmax_xent
 from repro.core.fedmeta import federated_meta_step

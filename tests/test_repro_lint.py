@@ -120,6 +120,16 @@ class TestDeterminismRules:
                   rules=["det-wallclock"])
         assert not vs
 
+    def test_serving_plane_is_det_critical(self):
+        # the serving engine (DESIGN.md §18) ships under the
+        # src/repro/federated/ DET_CRITICAL prefix — pin that a
+        # refactor of the scoping can't silently drop it
+        vs = lint("import time\nt = time.time()\n",
+                  relpath="src/repro/federated/serving.py",
+                  rules=["det-wallclock"])
+        assert rule_ids(vs) == {"det-wallclock"}
+        assert (REPO / "src/repro/federated/serving.py").exists()
+
     def test_set_iteration_into_accumulator_flagged(self):
         vs = lint("""
             def total(weights):

@@ -1,0 +1,271 @@
+"""Serving-plane tests (DESIGN.md §18): serve-path adaptation
+bit-identity against the training kernel, adaptation-cache LRU
+semantics, traffic-generator determinism, and decode equivalence
+against a single-request oracle.
+
+The bit-identity contract compares *jitted* paths on both sides —
+training always runs under jit, and eager op-by-op dispatch fuses
+differently (1-ulp drift), so jit-vs-eager is not part of the
+contract."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_algorithm
+from repro.federated.serving import (AdaptationCache, ServeRequest,
+                                     ServingEngine, TrafficModel,
+                                     support_digest)
+from repro.utils.flat import plane_for
+
+
+def _mlp_task(inner_steps=2):
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {"w1": jax.random.normal(k1, (6, 8)) * 0.1,
+                "w2": jax.random.normal(k2, (8, 3)) * 0.1}
+
+    def loss_fn(p, batch):
+        x, y = batch
+        return jnp.mean((jnp.tanh(x @ p["w1"]) @ p["w2"] - y) ** 2)
+
+    algo = make_algorithm("fomaml", loss_fn, lambda p, b: {}, 0.05,
+                          inner_steps)
+    phi = {"theta": init(jax.random.PRNGKey(0))}
+    return algo, phi
+
+
+def _mlp_support(rng, size):
+    return (jnp.asarray(rng.randn(size, 6), jnp.float32),
+            jnp.asarray(rng.randn(size, 3), jnp.float32))
+
+
+def _requests(n, sizes, seed=0):
+    """n requests with distinct clients and heterogeneous support sizes."""
+    rng = np.random.RandomState(seed)
+    return [ServeRequest(rid=i, client=i, arrival=float(i),
+                         support=_mlp_support(rng, sizes[i % len(sizes)]))
+            for i in range(n)]
+
+
+# ---- bit-identity: serve path vs training kernel -------------------------
+
+class TestServeAdaptBitIdentity:
+    def test_engine_rows_match_solo_adapt_heterogeneous(self):
+        """Engine rows == per-client jit(adapt) == jit(adapt_packed),
+        with heterogeneous support sizes bucketed across batches."""
+        algo, phi = _mlp_task()
+        plane = plane_for(phi["theta"])
+        reqs = _requests(10, sizes=(3, 5, 4))
+        engine = ServingEngine(algo, phi, adapt_batch=3,
+                               cache=AdaptationCache(None))
+        report = engine.serve(reqs)
+
+        jadapt = jax.jit(lambda p, s: plane.pack(algo.adapt(p, s)))
+        jpacked = jax.jit(lambda p, s: plane.pack(
+            algo.adapt_packed(p, s, plane=plane)))
+        for rec, req in zip(report.records, reqs):
+            assert rec["rid"] == req.rid
+            np.testing.assert_array_equal(
+                np.asarray(jadapt(phi, req.support)), np.asarray(rec["row"]))
+            np.testing.assert_array_equal(
+                np.asarray(jpacked(phi, req.support)), np.asarray(rec["row"]))
+
+    def test_rows_independent_of_batch_schedule(self):
+        """Same requests through adapt_batch = 1 / 2 / 5 (different
+        executables, different padding) -> bit-identical rows."""
+        algo, phi = _mlp_task()
+        reqs = _requests(7, sizes=(4,))
+        reports = [ServingEngine(algo, phi, adapt_batch=b,
+                                 cache=AdaptationCache(None)).serve(reqs)
+                   for b in (1, 2, 5)]
+        for other in reports[1:]:
+            for a, b in zip(reports[0].records, other.records):
+                np.testing.assert_array_equal(np.asarray(a["row"]),
+                                              np.asarray(b["row"]))
+
+    def test_adapt_packed_batch_matches_training_path(self):
+        """The engine's kernel entry (`adapt_packed_batch`) row c ==
+        jit(adapt_packed) of client c — the training deployment path —
+        including the meta-sgd learned-alpha variant."""
+        for name in ("fomaml", "meta-sgd"):
+            def loss_fn(p, batch):
+                x, y = batch
+                return jnp.mean((jnp.tanh(x @ p["w1"]) @ p["w2"] - y) ** 2)
+
+            def init(key):
+                k1, k2 = jax.random.split(key)
+                return {"w1": jax.random.normal(k1, (6, 8)) * 0.1,
+                        "w2": jax.random.normal(k2, (8, 3)) * 0.1}
+
+            algo = make_algorithm(name, loss_fn, lambda p, b: {}, 0.05, 2)
+            phi = algo.init_state(jax.random.PRNGKey(1), init)
+            plane = plane_for(phi["theta"])
+            rng = np.random.RandomState(3)
+            sups = [_mlp_support(rng, 4) for _ in range(4)]
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *sups)
+            fbatch = jax.jit(lambda p, s: algo.adapt_packed_batch(
+                p, s, plane=plane))
+            fsolo = jax.jit(lambda p, s: plane.pack(
+                algo.adapt_packed(p, s, plane=plane)))
+            rows = fbatch(phi, stacked)
+            for c, sup in enumerate(sups):
+                np.testing.assert_array_equal(
+                    np.asarray(fsolo(phi, sup)), np.asarray(rows[c]),
+                    err_msg=f"algo={name} row={c}")
+
+
+# ---- adaptation cache ----------------------------------------------------
+
+class TestAdaptationCache:
+    def test_hit_miss_and_lru_bound(self):
+        cache = AdaptationCache(capacity=2)
+        assert cache.get("a") is None                   # miss
+        cache.put("a", 1)
+        cache.put("b", 2)
+        assert cache.get("a") == 1                      # hit; a is now MRU
+        cache.put("c", 3)                               # evicts b (LRU)
+        assert cache.get("b") is None
+        assert cache.get("a") == 1 and cache.get("c") == 3
+        s = cache.stats()
+        assert s["evictions"] == 1
+        assert s["peak_resident"] == 2 and s["resident"] == 2
+        assert s["hits"] == 3 and s["misses"] == 2
+
+    def test_capacity_validation_and_clear(self):
+        with pytest.raises(ValueError):
+            AdaptationCache(0)
+        cache = AdaptationCache(None)                   # unbounded
+        for i in range(100):
+            cache.put(i, i)
+        assert len(cache) == 100
+        cache.clear()
+        assert len(cache) == 0 and cache.stats()["hits"] == 0
+
+    def test_engine_cache_bound_and_replay(self):
+        """6 distinct clients through a capacity-2 cache: peak stays at
+        2, replay of the two resident clients hits, evicted re-adapts
+        bit-identically."""
+        algo, phi = _mlp_task()
+        reqs = _requests(6, sizes=(4,))
+        engine = ServingEngine(algo, phi, adapt_batch=2,
+                               cache=AdaptationCache(2))
+        first = engine.serve(reqs)
+        assert engine.cache.stats()["peak_resident"] == 2
+        assert engine.cache.stats()["evictions"] == 4
+        # the resident tail (last two clients) hits; a full replay in
+        # the original order would scan-thrash the LRU (0 hits)
+        tail = engine.serve(reqs[4:])
+        assert all(r["hit"] for r in tail.records)
+        replay = engine.serve(reqs)       # evicted clients re-adapt
+        for a, b in zip(first.records, replay.records):
+            np.testing.assert_array_equal(np.asarray(a["row"]),
+                                          np.asarray(b["row"]))
+
+    def test_publish_phi_invalidates_by_version(self):
+        algo, phi = _mlp_task()
+        reqs = _requests(2, sizes=(4,))
+        engine = ServingEngine(algo, phi, adapt_batch=2)
+        engine.serve(reqs)
+        assert all(r["hit"] for r in engine.serve(reqs).records)
+        engine.publish_phi(phi)           # same φ, new version
+        assert not any(r["hit"] for r in engine.serve(reqs).records)
+
+    def test_support_digest_keys_content(self):
+        rng = np.random.RandomState(0)
+        a = _mlp_support(rng, 4)
+        same = tuple(jnp.asarray(np.asarray(x)) for x in a)
+        other = _mlp_support(rng, 4)
+        assert support_digest(a) == support_digest(same)
+        assert support_digest(a) != support_digest(other)
+        assert support_digest(a) != support_digest(
+            tuple(np.asarray(x, np.float64) for x in a))
+
+
+# ---- traffic model -------------------------------------------------------
+
+class TestTrafficModel:
+    def test_same_seed_same_table(self):
+        tm = dict(num_clients=8, rate=10.0, support_sizes=(2, 4),
+                  think_time=0.05, hot_skew=1.2)
+        t1 = TrafficModel(seed=5, **tm).arrival_table(40)
+        t2 = TrafficModel(seed=5, **tm).arrival_table(40)
+        assert t1 == t2
+        assert TrafficModel(seed=6, **tm).arrival_table(40) != t1
+
+    def test_content_stable_under_extension(self):
+        """rid < 20 rows of a 40-request table equal the 20-request
+        table's rows — per-field salted streams + causal flooring."""
+        tm = TrafficModel(num_clients=8, think_time=0.03, seed=9)
+        short = {row[0]: row for row in tm.arrival_table(20)}
+        long = {row[0]: row for row in tm.arrival_table(40)}
+        for rid, row in short.items():
+            assert long[rid] == row
+
+    def test_think_time_floor_per_client(self):
+        tm = TrafficModel(num_clients=2, rate=100.0, think_time=0.5, seed=0)
+        last = {}
+        for _, client, t, _ in tm.arrival_table(30):
+            if client in last:
+                assert t - last[client] >= 0.5 - 1e-9
+            last[client] = t
+
+    def test_requests_independent_of_materialization(self):
+        """Request payloads are stateless per (seed, client/rid): two
+        materializations agree leaf-for-leaf, and a client's support
+        set repeats across its requests (what makes caching work)."""
+        tm = TrafficModel(num_clients=3, rate=50.0, seed=2)
+        mk = lambda r, size: _mlp_support(r, size)
+        mp = lambda r: jnp.asarray(r.randint(0, 100, (8,)), jnp.int32)
+        r1 = tm.requests(12, mk, mp)
+        r2 = tm.requests(12, mk, mp)
+        by_client = {}
+        for a, b in zip(r1, r2):
+            assert (a.rid, a.client, a.arrival) == (b.rid, b.client, b.arrival)
+            for x, y in zip(jax.tree.leaves((a.support, a.prompt)),
+                            jax.tree.leaves((b.support, b.prompt))):
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+            key = support_digest(a.support)
+            assert by_client.setdefault(a.client, key) == key
+
+
+# ---- decode equivalence --------------------------------------------------
+
+class TestDecodeEquivalence:
+    def test_batched_serve_matches_single_request_oracle(self):
+        """Vmapped cross-request decode under per-request θ_u generates
+        exactly the tokens of a one-request-at-a-time prefill+decode
+        loop (reduced LM config)."""
+        from repro.configs import get_config, reduced_config
+        from repro.launch.serve import build_engine
+        from repro.launch.steps import make_decode_step, make_prefill_step
+
+        cfg = reduced_config(get_config("smollm-360m"))
+        engine = build_engine(cfg, adapt_batch=2, seed=0)
+        tm = TrafficModel(num_clients=3, rate=50.0, support_sizes=(2, 3),
+                          seed=1)
+        mk = lambda r, size: jnp.asarray(
+            r.randint(0, cfg.vocab_size, (size, 32)), jnp.int32)
+        mp = lambda r: jnp.asarray(
+            r.randint(0, cfg.vocab_size, (12,)), jnp.int32)
+        reqs = tm.requests(5, mk, mp)
+        report = engine.serve(reqs, max_new_tokens=4)
+
+        jprefill = jax.jit(make_prefill_step(cfg))
+        jdecode = jax.jit(make_decode_step(cfg))
+        plane = engine.plane
+        jadapt = jax.jit(lambda p, s: plane.pack(engine.algo.adapt(p, s)))
+        ordered = sorted(reqs, key=lambda q: (q.arrival, q.rid))
+        for rec, req in zip(report.records, ordered):
+            theta_u = plane.unpack(jadapt(engine._phi, req.support))
+            logits, cache = jprefill(theta_u, req.prompt[None])
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            oracle = [int(tok[0])]
+            for _ in range(3):
+                logits, cache = jdecode(theta_u, cache, tok[:, None])
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+                oracle.append(int(tok[0]))
+            assert oracle == rec["tokens"].tolist()
+            assert rec["decode_ms"] >= 0.0
+        s = report.summary()
+        assert s["requests"] == 5 and "decode_p50_ms" in s
